@@ -1,0 +1,58 @@
+"""Shared benchmark harness utilities.
+
+Every fig*/table* module exposes ``run(full: bool) -> list[dict]`` and
+prints CSV rows ``name,metric,value``; ``benchmarks.run`` orchestrates.
+Default sizes are reduced for CPU wall-time; ``--full`` reproduces the
+paper-scale sweeps.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+US = 1e-6
+
+
+def emit(rows: list[dict], stream_print=print) -> None:
+    for r in rows:
+        name = r.pop("name")
+        for k, v in r.items():
+            if isinstance(v, float):
+                stream_print(f"{name},{k},{v:.6g}")
+            else:
+                stream_print(f"{name},{k},{v}")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def stats(xs) -> dict:
+    xs = np.asarray([x for x in xs if np.isfinite(x)], dtype=np.float64)
+    if xs.size == 0:
+        return {"median": float("nan"), "p90": float("nan"),
+                "max": float("nan"), "n": 0}
+    return {
+        "median": float(np.median(xs)),
+        "p90": float(np.percentile(xs, 90)),
+        "max": float(xs.max()),
+        "n": int(xs.size),
+    }
+
+
+def gen_systems(seed: int, n: int, count: int, density: float = 1.0):
+    """Paper protocol systems: eigenvalues in [10, 1000] uS,
+    x ~ U[-0.5, 0.5], b = A x."""
+    from repro.data.spd import random_spd, random_rhs_from_solution
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(count):
+        a = random_spd(rng, n, density=density)
+        x, b = random_rhs_from_solution(rng, a)
+        out.append((a, x, b))
+    return out

@@ -1,0 +1,44 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,metric,value`` CSV rows.  ``--full`` reproduces the
+paper-scale sweeps (slow); the default is a reduced CPU-friendly pass.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset, e.g. fig12,fig13")
+    args = ap.parse_args()
+
+    from benchmarks.common import emit
+    from benchmarks.paper_figs import ALL
+
+    only = set(filter(None, args.only.split(",")))
+    t0 = time.time()
+    print("name,metric,value")
+    for key, fn in ALL.items():
+        if only and key not in only:
+            continue
+        t = time.time()
+        try:
+            rows = fn(full=args.full)
+        except Exception as e:  # noqa: BLE001
+            print(f"{key},ERROR,{e!r}", file=sys.stderr)
+            raise
+        emit(rows)
+        print(f"{key},wall_s,{time.time() - t:.1f}")
+    print(f"total,wall_s,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""TPU-side complexity benchmark — the hardware-adaptation claim.
+
+DESIGN.md §3: the paper's O(1) wall-clock does not transfer to a digital
+simulation, but its *structure* does — the number of transient steps to
+settle is set by matrix properties (max transformed conductance /
+deviation from diagonal dominance), NOT by n, while the per-step cost is
+one MVM at the memory roofline.
+
+This benchmark measures exactly that, using the fused ``transient_step``
+kernel semantics (reference path on CPU):
+
+  * fixed max transformed conductance (the Fig. 13 protocol) across
+    sizes -> step count flat in n  (the paper's claim, on TPU terms)
+  * per-step cost: 2*(2n)^2 MACs + O(n) update -> arithmetic intensity
+    ~2 flops/byte -> bandwidth-bound; reported as bytes/step.
+
+    PYTHONPATH=src:. python -m benchmarks.tpu_complexity
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import US, emit, stats
+from repro.core.network import build_proposed
+from repro.core.transient import assemble_state_space
+
+
+def steps_to_settle(a, b, x_ref, *, dt_safety=0.5, max_steps=200_000) -> int:
+    """Forward-Euler steps (= transient_step kernel invocations) until
+    every unknown stays within 1% of the solution."""
+    net = build_proposed(a, b)
+    ss = assemble_state_space(net)
+    m, c = ss.m, ss.c
+    # stable explicit step from the spectral bound
+    rate = np.abs(np.diag(m)).max()
+    dt = dt_safety / rate
+    z = np.zeros(ss.n_states)
+    n = len(x_ref)
+    tol = np.maximum(0.01 * np.abs(x_ref), 1e-4)
+    ok_since = None
+    check = 50
+    for i in range(0, max_steps, check):
+        for _ in range(check):
+            z = z + dt * (m @ z + c)
+        if np.all(np.abs(z[:n] - x_ref) <= tol):
+            if ok_since is None:
+                ok_since = i + check
+                return ok_since
+        else:
+            ok_since = None
+    return max_steps
+
+
+def run(full: bool = False) -> list[dict]:
+    from repro.data.spd import random_spd_fixed_conductance
+
+    rng = np.random.default_rng(77)
+    sizes = (30, 60, 120) if not full else (30, 60, 120, 240)
+    count = 3 if not full else 8
+    rows = []
+    for n in sizes:
+        steps, flops, bytes_ = [], [], []
+        for _ in range(count):
+            out = random_spd_fixed_conductance(rng, n, g_target=800 * US)
+            if out is None:
+                continue
+            a, x, b = out
+            k = steps_to_settle(a, b, x)
+            nz = 2 * n
+            steps.append(k)
+            flops.append(2.0 * nz * nz)                 # per step
+            bytes_.append(nz * nz * 4 + 3 * nz * 4)     # M + z/c/z' f32
+        s = stats(steps)
+        rows.append({
+            "name": f"tpu_complexity_n{n}",
+            "steps_median": s["median"],
+            "steps_p90": s["p90"],
+            "flops_per_step": float(np.median(flops)) if flops else 0.0,
+            "bytes_per_step": float(np.median(bytes_)) if bytes_ else 0.0,
+            "count": s["n"],
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,metric,value")
+    emit(run())

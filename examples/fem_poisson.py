@@ -1,0 +1,46 @@
+"""FEM example — the paper's motivating domain (Sec. VI): solve a 2-D
+Poisson problem through the purely passive O(1) path.
+
+    PYTHONPATH=src python examples/fem_poisson.py
+
+The 5-point finite-difference Laplacian is symmetric diagonally
+dominant, so the proposed design maps it to a network with ZERO op-amps
+(Eq. 25): settling is parasitic-RC limited and independent of the grid
+size — the paper's strongest claim, demonstrated on its target
+application.
+"""
+
+import numpy as np
+
+from repro.core.network import build_proposed
+from repro.core.operating_point import IDEAL, NonIdealities, operating_point
+from repro.core.transient import lti_transient
+from repro.data.fem import poisson_2d, poisson_rhs
+
+
+def main():
+    print("grid      n   passive  settle(us)  err_ideal     err_10bit")
+    for nx in (4, 6, 8, 10):
+        n = nx * nx
+        a = poisson_2d(nx, nx)
+        b = poisson_rhs(nx, nx)
+        x_ref = np.linalg.solve(a, b)
+
+        net = build_proposed(a, b)
+        t = lti_transient(net)
+        op = operating_point(net, x_ref=x_ref, nonideal=IDEAL)
+        op_q = operating_point(
+            net, x_ref=x_ref,
+            nonideal=NonIdealities(offset_mode="none", pot_bits=10))
+        print(f"{nx:2d}x{nx:<2d} {n:5d}   {str(net.is_passive):7s} "
+              f"{t.settle_time*1e6:9.3f}  {op.max_abs_error:.2e} V   "
+              f"{op_q.err_fullscale*100:.3f} %")
+
+    print("\nzero op-amps at every size: the SDD system maps to a purely")
+    print("passive network settling at parasitic-RC speed (microseconds;")
+    print("tracks lambda_min of the PDE operator, not the component count —")
+    print("the paper's O(1)-in-size claim for the SDD class).")
+
+
+if __name__ == "__main__":
+    main()

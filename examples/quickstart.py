@@ -1,0 +1,72 @@
+"""Quickstart: solve SPD systems through the simulated analog circuit.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's pipeline end to end on one random system:
+  1. generate an SPD system with the paper's protocol,
+  2. solve via the proposed 2n-design (ideal + hardware error model),
+  3. compare against the preliminary design and digital baselines,
+  4. report settling time, component counts and power.
+"""
+
+import numpy as np
+
+from repro.core import solve
+from repro.core.components import netlist_counts
+from repro.core.network import build_proposed
+from repro.core.operating_point import NonIdealities
+from repro.core.power import system_power
+from repro.core.transform import transform_2n
+from repro.data.spd import random_spd, random_rhs_from_solution
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 24
+    a = random_spd(rng, n)                       # eigenvalues 10..1000 uS
+    x_true, b = random_rhs_from_solution(rng, a)  # x ~ U[-0.5, 0.5] V
+
+    print(f"=== SPD system, n={n}, kappa={np.linalg.cond(a):.1f} ===\n")
+
+    # --- the paper's design, ideal components -------------------------
+    res = solve(a, b, method="analog_2n", x_ref=x_true, compute_settling=True)
+    print("analog 2n-design (ideal components):")
+    print(f"  max |x_hat - x|      : {res.info['max_abs_error']:.2e} V")
+    print(f"  settling time (1%)   : {res.settle_time*1e6:.1f} us")
+    print(f"  negative-R cells     : {res.info['n_amps']//2} (<= n = {n})")
+    print(f"  passive network      : {res.info['is_passive']}")
+
+    # --- with the hardware error model ---------------------------------
+    hw = NonIdealities(offset_mode="none", pot_bits=10, wiper_ohm=50.0)
+    res_hw = solve(a, b, method="analog_2n", nonideal=hw, x_ref=x_true)
+    print("\nanalog 2n-design (10-bit pots, 50-ohm wipers, finite gain):")
+    print(f"  full-scale error     : {res_hw.info['err_fullscale']*100:.3f} %")
+
+    # --- preliminary design & digital baselines ------------------------
+    res_pre = solve(a, b, method="analog_n", x_ref=x_true, compute_settling=True)
+    print("\npreliminary n-design:")
+    print(f"  settling time        : {res_pre.settle_time*1e6:.1f} us "
+          f"({res_pre.settle_time/res.settle_time:.1f}x slower)")
+    print(f"  op-amps              : {res_pre.info['n_amps']} "
+          f"(vs {res.info['n_amps']})")
+
+    for m in ("cholesky", "cg"):
+        r = solve(a, b, method=m)
+        err = np.abs(r.x - x_true).max()
+        extra = f", {r.info['iterations']} iterations" if m == "cg" else ""
+        print(f"digital {m:9s}: max err {err:.2e} V{extra}")
+
+    # --- component & power accounting ----------------------------------
+    net = build_proposed(a, b)
+    counts = netlist_counts(net)
+    tr = transform_2n(a, b)
+    p = system_power(a, np.asarray(tr.k_b), x_true,
+                     n_amps=net.n_amps, n_switches=counts["analog_switches"])
+    print(f"\ncomponents: {counts}")
+    print(f"power: network {p['network_w']*1e6:.2f} uW + cells "
+          f"{p['cells_w']*1e6:.2f} uW + amps {p['amps_w']*1e3:.1f} mW "
+          f"= {p['total_w']*1e3:.2f} mW total")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing: sharded, atomic, async, auto-resume."""
+
+from repro.checkpoint.manager import CheckpointManager

@@ -1,0 +1,16 @@
+"""Assigned architecture configs (exact public-literature shapes) plus
+the paper's own solver configurations.
+
+Select with ``--arch <id>``; ``get_config(arch_id)`` returns the full
+ModelConfig, ``get_smoke_config(arch_id)`` a reduced same-family config
+for CPU smoke tests.
+"""
+
+from repro.configs.registry import (
+    ARCH_IDS,
+    SHAPES,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    shape_applicable,
+)

@@ -1,0 +1,129 @@
+"""Architecture registry + shape grid + input specs.
+
+Each ``<arch>.py`` module defines ``CONFIG`` (exact literature shape)
+and ``SMOKE`` (reduced same-family config).  The shape grid is the
+assignment's four cells; ``shape_applicable`` encodes the documented
+skips (long_500k only for sub-quadratic families — see DESIGN.md
+§Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+ARCH_IDS = [
+    "mixtral_8x22b",
+    "granite_moe_1b_a400m",
+    "internvl2_1b",
+    "granite_20b",
+    "command_r_35b",
+    "yi_34b",
+    "qwen3_8b",
+    "mamba2_370m",
+    "whisper_base",
+    "zamba2_7b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.SMOKE
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(applicable, reason-if-not)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "long_500k needs sub-quadratic attention; "
+            f"{cfg.arch_id} is a full-attention arch (skip per DESIGN.md)"
+        )
+    return True, ""
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeSpec, *, per_pod_batch: int | None = None
+) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    Frontends are stubs per the assignment: whisper gets precomputed
+    frame embeddings, internvl2 precomputed patch embeddings.
+    """
+    bsz = per_pod_batch if per_pod_batch is not None else shape.global_batch
+    s = shape.seq_len
+    tok = jnp.int32
+    act = cfg.act_dtype()
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_patches
+            return {
+                "tokens": sds((bsz, s_text), tok),
+                "targets": sds((bsz, s_text), tok),
+                "patches": sds((bsz, cfg.n_patches, cfg.d_model), act),
+            }
+        if cfg.family == "encdec":
+            return {
+                "tokens": sds((bsz, s), tok),
+                "targets": sds((bsz, s), tok),
+                "frames": sds((bsz, cfg.enc_len, cfg.d_model), act),
+            }
+        return {
+            "tokens": sds((bsz, s), tok),
+            "targets": sds((bsz, s), tok),
+        }
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_patches
+            return {
+                "tokens": sds((bsz, s_text), tok),
+                "patches": sds((bsz, cfg.n_patches, cfg.d_model), act),
+            }
+        if cfg.family == "encdec":
+            return {
+                "tokens": sds((bsz, s), tok),
+                "frames": sds((bsz, cfg.enc_len, cfg.d_model), act),
+            }
+        return {"tokens": sds((bsz, s), tok)}
+
+    # decode: one new token against a cache of seq_len
+    from repro.models.model import init_decode_cache
+
+    cache = jax.eval_shape(
+        lambda: init_decode_cache(cfg, bsz, s))
+    return {
+        "token": sds((bsz, 1), tok),
+        "pos": sds((), jnp.int32),
+        "cache": cache,
+    }

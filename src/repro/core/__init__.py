@@ -1,0 +1,99 @@
+"""repro.core — Resistive Network Mapping (RNM) analog SPD solver.
+
+This package implements the paper's contribution:
+
+  * the equivalent-resistive-network mapping of an SPD system ``A x = b``
+    (Sec. II, Eqs. 5-6),
+  * the preliminary n-unknown design (Sec. III, Eqs. 12-13),
+  * the proposed 2n-unknown transform (Sec. IV, Eqs. 14-23) with the
+    eigen-split stability analysis (Eq. 17) and the proposed D matrix
+    (Eq. 22),
+  * behavioral op-amp models (Table I) and the circuit transient engine
+    (LTI modal solution + nonlinear scan integration) that replaces the
+    paper's LTspice runs,
+  * operating-point analysis with component non-idealities,
+  * the crosspoint-array layout (Sec. IV-A4), power model (Eqs. 28-31)
+    and component-count formulas (Table II).
+
+Circuit analyses require float64: importing ``repro.core`` enables JAX
+x64 mode globally.  Model/training code elsewhere in the repo always
+passes explicit dtypes, so it is unaffected.
+"""
+
+from jax import config as _config
+
+_config.update("jax_enable_x64", True)
+
+from repro.core.specs import (  # noqa: E402
+    AD712,
+    LTC2050,
+    LTC6268,
+    OPAMPS,
+    CircuitParams,
+    OpAmpSpec,
+)
+from repro.core.transform import (  # noqa: E402
+    Transformed2N,
+    assemble_2n,
+    column_abs_sums,
+    d_matrix_proposed,
+    d_matrix_scaled,
+    supply_conductance,
+    transform_2n,
+)
+from repro.core.network import (  # noqa: E402
+    Netlist,
+    build_preliminary,
+    build_proposed,
+)
+from repro.core.transient import (  # noqa: E402
+    StateSpace,
+    TransientResult,
+    assemble_state_space,
+    lti_transient,
+    settling_time,
+)
+from repro.core.operating_point import (  # noqa: E402
+    NonIdealities,
+    OperatingPoint,
+    operating_point,
+)
+from repro.core.solver import SolveResult, solve  # noqa: E402
+from repro.core.sdd import is_diagonally_dominant, sdd_margin  # noqa: E402
+from repro.core.power import system_power  # noqa: E402
+from repro.core.components import component_counts  # noqa: E402
+from repro.core.crosspoint import crosspoint_layout  # noqa: E402
+
+__all__ = [
+    "AD712",
+    "LTC2050",
+    "LTC6268",
+    "OPAMPS",
+    "CircuitParams",
+    "OpAmpSpec",
+    "Transformed2N",
+    "assemble_2n",
+    "column_abs_sums",
+    "d_matrix_proposed",
+    "d_matrix_scaled",
+    "supply_conductance",
+    "transform_2n",
+    "Netlist",
+    "build_preliminary",
+    "build_proposed",
+    "StateSpace",
+    "TransientResult",
+    "assemble_state_space",
+    "lti_transient",
+    "settling_time",
+    "NonIdealities",
+    "OperatingPoint",
+    "operating_point",
+    "SolveResult",
+    "solve",
+    "is_diagonally_dominant",
+    "sdd_margin",
+    "system_power",
+    "component_counts",
+    "crosspoint_layout",
+]

@@ -1,0 +1,101 @@
+"""Crosspoint-array layout of the proposed design (Sec. IV-A4, Fig. 11).
+
+The 2n-design maps onto the standard MVM crossbar:
+
+* rows/columns = the 2n unknown nodes; row i is wired to column i;
+* off-diagonals of K_A / K_B are halved and assigned symmetrically to
+  (i, j) and (j, i) — two parallel resistors realizing the original one;
+* the diagonal of the array is electrically irrelevant (both ends on the
+  same node) and K_B's diagonal is deliberately zeroed in the array —
+  those elements live in *external* element circuits so they can flip to
+  negative resistance;
+* two extra columns carry the supply conductances (Eq. 13), one extra
+  row the ground conductances (column sums).
+
+On TPU this array *is* the MXU operand: ``kernels/crosspoint_mvm``
+performs the array's physics (I = G V) as a VMEM-tiled matmul.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.transform import Transformed2N, assemble_2n
+
+
+class CrosspointLayout(NamedTuple):
+    g_array: jnp.ndarray        # (2n, 2n) crossbar conductances, >= 0
+    supply_cols: jnp.ndarray    # (2n, 2) conductances to x_s+ / x_s-
+    ground_row: jnp.ndarray     # (2n,) conductances to ground
+    external_cells: jnp.ndarray # (n,) diag(K_B): element circuits i <-> n+i
+    supply_v: float
+
+    def mvm_currents(self, v: jnp.ndarray) -> jnp.ndarray:
+        """Array current drawn from each node at voltages ``v`` —
+        the crossbar MVM the analog hardware performs for free."""
+        # branch (i,j) of conductance g carries g (v_i - v_j) out of i
+        g = self.g_array
+        return v * g.sum(axis=1) - g @ v
+
+    def dc_operator(self) -> jnp.ndarray:
+        """Reassemble the circuit's DC operator from the layout
+        (used as the layout round-trip property test)."""
+        g = self.g_array
+        n2 = g.shape[0]
+        n = n2 // 2
+        # halved symmetric entries: g holds K/2 both sides -> sum = K
+        m = -(g + g.T)
+        off_diag_sum = (g + g.T).sum(axis=1)
+        diag = off_diag_sum + self.ground_row + self.supply_cols.sum(axis=1)
+        m = m.at[jnp.arange(n2), jnp.arange(n2)].set(diag)
+        # external cells stamp the (i, n+i) pairs
+        idx = jnp.arange(n)
+        w = self.external_cells
+        m = m.at[idx, idx + n].add(w)
+        m = m.at[idx + n, idx].add(w)
+        m = m.at[idx, idx].add(-w)
+        m = m.at[idx + n, idx + n].add(-w)
+        return m
+
+
+def crosspoint_layout(tr: Transformed2N) -> CrosspointLayout:
+    """Map a transformed system onto the crossbar (Fig. 11)."""
+    n = tr.n
+    k2n = assemble_2n(tr.k_a, tr.k_b)
+    # off-diagonal conductances: g_ij = -K_ij (>= 0 off the K_B diagonal),
+    # halved and mirrored; array diagonal and K_B diagonal zeroed.
+    g = -k2n / 2.0
+    g = g.at[jnp.arange(2 * n), jnp.arange(2 * n)].set(0.0)
+    idx = jnp.arange(n)
+    external = jnp.diagonal(tr.k_b)
+    g = g.at[idx, idx + n].set(0.0)
+    g = g.at[idx + n, idx].set(0.0)
+    g = jnp.maximum(g, 0.0)   # numerical guard; entries are >= 0 by Eq. 15-16
+
+    k_s = tr.k_s
+    pos = (tr.b_sign > 0).astype(k2n.dtype)
+    neg = (tr.b_sign < 0).astype(k2n.dtype)
+    # node i (first block) connects to +rail when b_i > 0; mirror node to -rail
+    supply_cols = jnp.stack(
+        [
+            jnp.concatenate([k_s * pos, k_s * neg]),
+            jnp.concatenate([k_s * neg, k_s * pos]),
+        ],
+        axis=1,
+    )
+
+    # ground row: column sums of the full circuit operator (only nodes
+    # 1 and n+1 are nonzero under the proposed D, Eq. 22)
+    m_full = k2n + jnp.diag(jnp.concatenate([k_s, k_s]))
+    gamma = m_full.sum(axis=0) - jnp.concatenate([k_s, k_s])
+    ground_row = jnp.maximum(gamma, 0.0)
+
+    return CrosspointLayout(
+        g_array=g,
+        supply_cols=supply_cols,
+        ground_row=ground_row,
+        external_cells=external,
+        supply_v=tr.supply_v,
+    )

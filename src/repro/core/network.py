@@ -1,0 +1,354 @@
+"""Netlist construction for both circuit designs.
+
+A :class:`Netlist` is the bridge between the linear-algebra view and the
+circuit view.  It is built host-side (numpy, float64) because the number
+of negative-resistance cells is data dependent; the transient engine
+assembles a dense LTI state-space from it.
+
+The netlist keeps the *physical component list* (branch resistors,
+ground legs, supply resistors, negative-resistance cells) rather than a
+pre-assembled matrix, so that component non-idealities (digital-pot
+quantization, tolerance) can be applied per resistor exactly as they
+would occur in hardware.
+
+Conventions
+-----------
+* Nodes ``0 .. n_nodes-1`` are the unknown voltages (2n for the proposed
+  design).  Ground is implicit.
+* KCL for the dynamic circuit reads
+
+      C dv/dt = s  -  M_passive v  +  sum_cells w (a_cell - v_node)
+
+  where ``M_passive`` carries every passive stamp (branches, ground
+  legs, supply resistors) and ``a_cell`` is the op-amp output driving a
+  cell's mirror node (steady state ``a = 2 v_i - v_j``, Sec. II-B).
+* ``s`` is the Norton supply current ``k_s * x_s`` (= b by Eq. 13).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.specs import CircuitParams, DEFAULT_PARAMS
+from repro.core import transform as T
+
+
+@dataclasses.dataclass
+class NegCell:
+    """One negative-resistance cell (Sec. II-B, Fig. 3).
+
+    Pair cell (j >= 0): two op-amps + two buffers realize conductance
+    ``-w`` between nodes i and j.  Ground cell (j == -1): a single
+    op-amp realizes ``-w`` from node i to ground.
+    """
+
+    i: int
+    j: int          # -1 for ground
+    w: float        # magnitude of the (negative) conductance, > 0
+
+    @property
+    def n_amps(self) -> int:
+        return 2 if self.j >= 0 else 1
+
+    @property
+    def n_buffers(self) -> int:
+        return 2 if self.j >= 0 else 1
+
+
+@dataclasses.dataclass
+class Netlist:
+    design: str                      # "preliminary" | "proposed" | "passive"
+    n_unknowns: int                  # n of the original system
+    n_nodes: int                     # n (preliminary) or 2n (proposed)
+    # physical components (all conductances > 0):
+    branch_i: np.ndarray             # (n_br,) int
+    branch_j: np.ndarray             # (n_br,) int
+    branch_g: np.ndarray             # (n_br,) float
+    ground_g: np.ndarray             # (n_nodes,) float >= 0
+    supply_g: np.ndarray             # (n_nodes,) float >= 0 (Eq. 13 stamps)
+    supply_v: np.ndarray             # (n_nodes,) float (+/- rail or 0=NC)
+    cells: list[NegCell] = dataclasses.field(default_factory=list)
+    params: CircuitParams = DEFAULT_PARAMS
+    # switch-bearing element circuits touching each node (Fig. 6):
+    # preliminary design = every matrix element; proposed = only the
+    # K_B-diagonal cells + supply switches (crosspoint pots have none).
+    element_count: np.ndarray | None = None
+
+    @property
+    def n_amps(self) -> int:
+        return sum(c.n_amps for c in self.cells)
+
+    @property
+    def n_branches(self) -> int:
+        return int(self.branch_g.shape[0])
+
+    @property
+    def is_passive(self) -> bool:
+        return not self.cells
+
+    @property
+    def s(self) -> np.ndarray:
+        """Norton supply current vector."""
+        return self.supply_g * self.supply_v
+
+    def assemble_passive(self) -> np.ndarray:
+        """Dense passive operator (branches + ground legs + supplies)."""
+        n = self.n_nodes
+        m = np.zeros((n, n), dtype=np.float64)
+        bi, bj, bg = self.branch_i, self.branch_j, self.branch_g
+        np.add.at(m, (bi, bj), -bg)
+        np.add.at(m, (bj, bi), -bg)
+        diag = np.zeros(n, dtype=np.float64)
+        np.add.at(diag, bi, bg)
+        np.add.at(diag, bj, bg)
+        diag += self.ground_g + self.supply_g
+        m[np.arange(n), np.arange(n)] += diag
+        return m
+
+    def assemble_dc(self) -> np.ndarray:
+        """Full DC operator including negative-resistance cell stamps.
+
+        Solving ``M v = s`` gives the ideal operating point; for the
+        proposed design ``v = [x; -x]``.
+        """
+        m = self.assemble_passive()
+        for c in self.cells:
+            if c.j >= 0:
+                m[c.i, c.j] += c.w
+                m[c.j, c.i] += c.w
+                m[c.i, c.i] -= c.w
+                m[c.j, c.j] -= c.w
+            else:
+                m[c.i, c.i] -= c.w
+        return m
+
+    def max_conductance(self) -> float:
+        """Largest branch/cell conductance (the Figs. 12-14 regressor)."""
+        gmax = float(self.branch_g.max()) if self.n_branches else 0.0
+        if self.cells:
+            gmax = max(gmax, max(c.w for c in self.cells))
+        return gmax
+
+    def recovered_solution(self, v: np.ndarray) -> np.ndarray:
+        """Read the unknown vector off the node voltages."""
+        return v[..., : self.n_unknowns]
+
+    def perturbed(self, rng: np.random.Generator, rel: float) -> "Netlist":
+        """Multiplicative conductance perturbation on every resistor."""
+        def p(x):
+            return x * (1.0 + rel * rng.uniform(-1.0, 1.0, size=np.shape(x)))
+
+        return dataclasses.replace(
+            self,
+            branch_g=p(self.branch_g),
+            ground_g=p(self.ground_g),
+            supply_g=p(self.supply_g),
+            cells=[dataclasses.replace(c, w=float(p(c.w))) for c in self.cells],
+        )
+
+    def with_wiper(self, r_wiper: float) -> "Netlist":
+        """Pot wiper/series resistance: g -> g / (1 + g * R_w).
+
+        This is the parasitic the paper's alpha-scaling study (Fig. 16)
+        attenuates: scaling conductances down makes ``g * R_w`` — the
+        relative conductance error — proportionally smaller.
+        """
+        def w(x):
+            x = np.asarray(x, dtype=np.float64)
+            return x / (1.0 + x * r_wiper)
+
+        return dataclasses.replace(
+            self,
+            branch_g=w(self.branch_g),
+            ground_g=w(self.ground_g),
+            supply_g=w(self.supply_g),
+            cells=[dataclasses.replace(c, w=float(w(c.w))) for c in self.cells],
+        )
+
+    def quantized(self, bits: int, g_full_scale: float | None = None) -> "Netlist":
+        """Digital-potentiometer quantization (N-bit, resistance-domain).
+
+        A digital pot with full-scale conductance ``g_fs`` realizes codes
+        ``g = code / (2^bits - 1) * g_fs``; each programmed conductance
+        snaps to the nearest code (zero stays zero / not-connected).
+        The supply pots are a separate bank with their own full scale
+        (the paper's RHS circuit, Fig. 5, is independent of the LHS
+        element pots).
+        """
+        if bits <= 0:
+            return self
+        levels = (1 << bits) - 1
+        if g_full_scale is None:
+            g_full_scale = max(self.max_conductance(), 1e-30)
+        step = g_full_scale / levels
+        sup_max = float(self.supply_g.max())
+        sup_step = (sup_max / levels) if sup_max > 0 else step
+
+        def q(x, st):
+            x = np.asarray(x, dtype=np.float64)
+            return np.where(x > 0, np.maximum(np.round(x / st), 1.0) * st, 0.0)
+
+        return dataclasses.replace(
+            self,
+            branch_g=q(self.branch_g, step),
+            ground_g=q(self.ground_g, step),
+            supply_g=q(self.supply_g, sup_step),
+            cells=[dataclasses.replace(c, w=float(q(c.w, step)))
+                   for c in self.cells],
+        )
+
+
+def _extract_components(
+    m_dc: np.ndarray,
+    supply_g: np.ndarray,
+    supply_v: np.ndarray,
+    *,
+    pair_mask: np.ndarray | None,
+    tol: float,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, list[NegCell]]:
+    """Decompose a DC operator into physical components.
+
+    branch g_ij = -M_ij for M_ij < 0; cells for M_ij > 0; ground legs
+    from column sums minus supply stamps.
+    """
+    n = m_dc.shape[0]
+    iu, ju = np.triu_indices(n, k=1)
+    vals = m_dc[iu, ju]
+
+    neg = vals < -tol
+    bi, bj, bg = iu[neg], ju[neg], -vals[neg]
+
+    pos = vals > tol
+    if pair_mask is not None and np.any(pos & ~pair_mask[iu, ju]):
+        raise ValueError(
+            "positive off-diagonal outside allowed cell positions; "
+            "transform violated its guarantee"
+        )
+    cells = [
+        NegCell(i=int(i), j=int(j), w=float(w))
+        for i, j, w in zip(iu[pos], ju[pos], vals[pos])
+    ]
+
+    # physical ground legs: column sums minus supply stamp
+    gamma = m_dc.sum(axis=0) - supply_g
+    gcells = [
+        NegCell(i=int(i), j=-1, w=float(-g)) for i, g in enumerate(gamma) if g < -tol
+    ]
+    cells.extend(gcells)
+    ground_g = np.where(gamma > tol, gamma, 0.0)
+    return bi, bj, bg, ground_g, cells
+
+
+def build_preliminary(
+    a: np.ndarray,
+    b: np.ndarray,
+    *,
+    params: CircuitParams = DEFAULT_PARAMS,
+    tol: float = 1e-14,
+) -> Netlist:
+    """Sec. III: map ``(A - K_s) x = b - K_s x`` directly onto n nodes.
+
+    The DC operator is A itself (the K_s stamp cancels across Eq. 12);
+    every positive off-diagonal A_ij and every negative physical ground
+    leg becomes a negative-resistance cell.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n = a.shape[0]
+    supply_g = np.abs(b) / params.supply_v                 # Eq. 13
+    supply_v = params.supply_v * np.sign(b)
+
+    scale = max(np.abs(a).max(), 1.0) * tol
+    bi, bj, bg, ground_g, cells = _extract_components(
+        a, supply_g, supply_v, pair_mask=None, tol=scale
+    )
+    # every matrix element is a switch-bearing element circuit (Fig. 6):
+    # off-diagonal branches AND cells touch both nodes, ground/diagonal
+    # elements and supply switches touch one.
+    elem = np.zeros(n, dtype=np.float64)
+    np.add.at(elem, bi, 1.0)
+    np.add.at(elem, bj, 1.0)
+    for c in cells:
+        elem[c.i] += 1.0
+        if c.j >= 0:
+            elem[c.j] += 1.0
+    elem += (ground_g > 0).astype(np.float64)
+    elem += (supply_g > 0).astype(np.float64)
+    return Netlist(
+        design="preliminary",
+        n_unknowns=n,
+        n_nodes=n,
+        branch_i=bi,
+        branch_j=bj,
+        branch_g=bg,
+        ground_g=ground_g,
+        supply_g=supply_g,
+        supply_v=supply_v,
+        cells=cells,
+        params=params,
+        element_count=elem,
+    )
+
+
+def build_proposed(
+    a: np.ndarray,
+    b: np.ndarray,
+    *,
+    d_policy: str = "proposed",
+    beta: float = 0.5,
+    alpha: float = 1.0,
+    params: CircuitParams = DEFAULT_PARAMS,
+    tol: float = 1e-14,
+) -> Netlist:
+    """Sec. IV: the proposed 2n-design netlist.
+
+    Only the diagonal of K_B can be positive, i.e. cells live strictly
+    on (i, n+i) pairs; a diagonally dominant (A - K_s) yields a fully
+    passive network (Eq. 25) -> the O(1) path.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n = a.shape[0]
+
+    tr = T.transform_2n(a, b, d_policy=d_policy, beta=beta, params=params)
+    if alpha != 1.0:
+        tr = T.scale_system(tr, alpha)
+    m_dc = np.asarray(tr.assembled(), dtype=np.float64)
+
+    k_s = np.asarray(tr.k_s, dtype=np.float64)
+    sign = np.asarray(tr.b_sign, dtype=np.float64)
+    supply_g = np.concatenate([k_s, k_s])
+    supply_v = params.supply_v * np.concatenate([sign, -sign])
+
+    pair_mask = np.zeros((2 * n, 2 * n), dtype=bool)
+    idx = np.arange(n)
+    pair_mask[idx, idx + n] = True
+
+    scale = max(np.abs(m_dc).max(), 1.0) * tol
+    bi, bj, bg, ground_g, cells = _extract_components(
+        m_dc, supply_g, supply_v, pair_mask=pair_mask, tol=scale
+    )
+    # crosspoint pots are switchless (Sec. IV-A4): only the external
+    # K_B-diagonal element circuits and the supply switches load nodes.
+    elem = np.zeros(2 * n, dtype=np.float64)
+    for c in cells:
+        elem[c.i] += 1.0
+        if c.j >= 0:
+            elem[c.j] += 1.0
+    elem += (supply_g > 0).astype(np.float64)
+    return Netlist(
+        design="proposed" if cells else "passive",
+        n_unknowns=n,
+        n_nodes=2 * n,
+        branch_i=bi,
+        branch_j=bj,
+        branch_g=bg,
+        ground_g=ground_g,
+        supply_g=supply_g,
+        supply_v=supply_v,
+        cells=cells,
+        params=params,
+        element_count=elem,
+    )

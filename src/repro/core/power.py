@@ -1,0 +1,67 @@
+"""Power-consumption model of the proposed design (Sec. IV-B4).
+
+Eq. 31:
+
+    P_sys = P_amp + P_sw + 4 k_R x^T x + 6 x^T (K_B + |K_B|) x + 2 x^T A x
+
+* ``2 x^T A x``            — passive network + supply resistors (Eq. 28
+                             simplified through Eqs. 14/18).
+* ``6 x^T (K_B+|K_B|) x``  — correction for the negative-resistance
+                             cells (Eq. 29): only positive diag(K_B)
+                             entries contribute; the voltage across each
+                             cell resistor is 2 x_i and there are two
+                             pots (R_pot1, R_pot2) per cell.
+* ``4 k_R x^T x``          — the gain-network resistors (R1 = R2 =
+                             1/k_R = 10 kOhm), amp outputs at +/-3 x_i
+                             (Eq. 30).
+* ``P_amp``, ``P_sw``      — quiescent device power.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.specs import CircuitParams, DEFAULT_PARAMS
+
+# Quiescent power per device [W] (datasheet supply currents x typical rails).
+AMP_QUIESCENT_W = {
+    "AD712": 5.0e-3 * 30.0,      # 5 mA max per amp on +/-15 V
+    "LTC2050": 0.75e-3 * 10.0,   # 750 uA on +/-5 V
+    "LTC6268": 16.5e-3 * 10.0,   # 16.5 mA on +/-5 V
+    "ideal": 0.0,
+}
+SWITCH_QUIESCENT_W = 1e-6        # CMOS analog switch leakage-level
+
+
+def system_power(
+    a: jnp.ndarray,
+    k_b: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    n_amps: int = 0,
+    n_switches: int = 0,
+    opamp_name: str = "AD712",
+    params: CircuitParams = DEFAULT_PARAMS,
+) -> dict:
+    """Evaluate Eq. 31 term by term (watts)."""
+    a = jnp.asarray(a, dtype=jnp.float64)
+    k_b = jnp.asarray(k_b, dtype=jnp.float64)
+    x = jnp.asarray(x, dtype=jnp.float64)
+
+    p_network = 2.0 * x @ (a @ x)
+    kb_pos = k_b + jnp.abs(k_b)
+    p_cells = 6.0 * x @ (kb_pos @ x)
+    # Eq. 30 counts the gain network per active cell; with no cells the
+    # term vanishes.
+    p_gain = 4.0 * params.k_gain * (x @ x) if n_amps > 0 else jnp.zeros(())
+    p_amp = AMP_QUIESCENT_W.get(opamp_name, 0.0) * n_amps
+    p_sw = SWITCH_QUIESCENT_W * n_switches
+    total = p_network + p_cells + p_gain + p_amp + p_sw
+    return {
+        "network_w": float(p_network),
+        "cells_w": float(p_cells),
+        "gain_resistors_w": float(p_gain),
+        "amps_w": float(p_amp),
+        "switches_w": float(p_sw),
+        "total_w": float(total),
+    }

@@ -1,0 +1,34 @@
+"""Symmetric-diagonally-dominant detection — the O(1) passive path.
+
+Eq. 25: the proposed design is *fully passive* (no op-amps, settling at
+parasitic-RC speed, independent of n) exactly when
+
+    A_ii >= (K_s)_ii + sum_{j != i} |A_ji|     for all i,
+
+i.e. (A - K_s) is (column) diagonally dominant.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.transform import column_abs_sums, supply_conductance
+
+
+def sdd_margin(a: jnp.ndarray, b: jnp.ndarray, supply_v: float = 4.0) -> jnp.ndarray:
+    """Per-column margin of Eq. 25 (>= 0 everywhere -> passive network).
+
+    margin_i = A_ii - (K_s)_ii - sum_{j != i} |A_ji|
+    """
+    a = jnp.asarray(a)
+    k_s = supply_conductance(jnp.asarray(b), supply_v)
+    diag = jnp.diagonal(a)
+    off = column_abs_sums(a) - jnp.abs(diag)
+    return diag - k_s - off
+
+
+def is_diagonally_dominant(
+    a: jnp.ndarray, b: jnp.ndarray, supply_v: float = 4.0, tol: float = 0.0
+) -> jnp.ndarray:
+    """True iff the transformed network needs no negative-resistance cell."""
+    return jnp.all(sdd_margin(a, b, supply_v) >= -tol)

@@ -1,0 +1,123 @@
+"""Public solve API — the paper's technique as a composable module.
+
+``solve(A, b, method=...)`` dispatches between the analog designs and
+the digital baselines:
+
+* ``analog_2n``   — the proposed 2n-design (Sec. IV).  Builds the
+  netlist, runs the (non-ideal) operating point, optionally the LTI
+  settling analysis.  This is the paper-faithful path.
+* ``analog_n``    — the preliminary n-design (Sec. III) baseline.
+* ``cholesky`` / ``cg`` / ``jacobi`` — digital baselines.
+
+The analog paths execute the *simulated physics* of the circuit; the
+result therefore carries the circuit's error model (op-amp offsets,
+digital-pot quantization) and its settling time — the quantities the
+paper evaluates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core import baselines
+from repro.core.network import build_preliminary, build_proposed
+from repro.core.operating_point import (
+    DEFAULT_NONIDEAL,
+    IDEAL,
+    NonIdealities,
+    operating_point,
+)
+from repro.core.specs import OPAMPS, CircuitParams, DEFAULT_PARAMS, OpAmpSpec
+from repro.core.transient import lti_transient
+
+
+@dataclasses.dataclass
+class SolveResult:
+    x: np.ndarray
+    method: str
+    stable: bool = True
+    settle_time: float | None = None
+    info: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def solve(
+    a,
+    b,
+    *,
+    method: str = "analog_2n",
+    opamp: str | OpAmpSpec = "AD712",
+    nonideal: NonIdealities | None = None,
+    params: CircuitParams = DEFAULT_PARAMS,
+    d_policy: str = "proposed",
+    beta: float = 0.5,
+    alpha: float = 1.0,
+    compute_settling: bool = False,
+    x_ref: np.ndarray | None = None,
+    tol: float = 1e-10,
+    max_iter: int = 10000,
+) -> SolveResult:
+    """Solve the SPD system ``A x = b``.
+
+    ``nonideal=None`` uses the ideal component model for the analog
+    paths (still finite-gain/offset-free); pass
+    :data:`repro.core.operating_point.DEFAULT_NONIDEAL` or a custom
+    :class:`NonIdealities` to engage the hardware error model.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+
+    if method in ("cholesky", "cg", "jacobi"):
+        if method == "cholesky":
+            x = np.asarray(baselines.cholesky_solve(a, b))
+            return SolveResult(x=x, method=method)
+        fn = baselines.cg_solve if method == "cg" else baselines.jacobi_solve
+        res = fn(a, b, tol=tol, max_iter=max_iter)
+        return SolveResult(
+            x=np.asarray(res.x),
+            method=method,
+            info={
+                "iterations": int(res.iterations),
+                "residual_norm": float(res.residual_norm),
+            },
+        )
+
+    spec = OPAMPS[opamp] if isinstance(opamp, str) else opamp
+    ni = IDEAL if nonideal is None else nonideal
+
+    if method == "analog_2n":
+        net = build_proposed(
+            a, b, d_policy=d_policy, beta=beta, alpha=alpha, params=params
+        )
+    elif method == "analog_n":
+        net = build_preliminary(a, b, params=params)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    op = operating_point(net, spec, nonideal=ni, x_ref=x_ref)
+    result = SolveResult(
+        x=op.x,
+        method=method,
+        stable=not op.amp_saturated,
+        info={
+            "design": net.design,
+            "n_nodes": net.n_nodes,
+            "n_amps": net.n_amps,
+            "n_branches": net.n_branches,
+            "is_passive": net.is_passive,
+            "max_conductance": net.max_conductance(),
+            "max_rel_error": op.max_rel_error,
+            "max_abs_error": op.max_abs_error,
+            "err_fullscale": op.err_fullscale,
+        },
+    )
+    if compute_settling:
+        tr = lti_transient(net, spec)
+        result.settle_time = tr.settle_time
+        result.stable = result.stable and tr.stable
+        result.info["max_re_eig"] = tr.max_re_eig
+        result.info["dominant_tau"] = tr.dominant_tau
+        result.info["mirror_residual"] = tr.mirror_residual
+    return result

@@ -1,0 +1,120 @@
+"""Nonlinear transient integration (slew-rate + rail saturation).
+
+The LTI path (:mod:`repro.core.transient`) is exact for the linear
+regime, but the instability signature the paper reports for non-PD
+systems — "the voltage at the output node of at least one op-amp ...
+reaches the amplifier maximum or minimum output voltage" (Sec. III-C.2)
+— is inherently nonlinear.  This module integrates
+
+    dz/dt = f(z),   f = M z + c  with per-amp slew clipping and
+                    output-rail clamping
+
+with fixed-step RK4 under ``jax.lax.scan`` (float64; repro.core enables
+x64).  Used by the Fig. 8 stability benchmark and as a cross-check of
+the LTI settling times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import Netlist
+from repro.core.specs import OpAmpSpec, AD712
+from repro.core.transient import assemble_state_space
+
+
+@dataclasses.dataclass
+class NLTrace:
+    times: np.ndarray            # (n_samples,)
+    x: np.ndarray                # (n_samples, n_unknowns) node voltages
+    amp_out: np.ndarray          # (n_samples, n_amps)
+    saturated: bool              # any amp pinned at a rail at the end
+    x_final: np.ndarray
+
+
+@partial(jax.jit, static_argnames=("n_steps", "store_every"))
+def _integrate(m, c, int_mask, out_mask, slew, rail, z0, dt, n_steps: int, store_every: int):
+    def f(z):
+        dz = m @ z + c
+        # slew-rate limit on the integrator rows
+        dz = jnp.where(int_mask, jnp.clip(dz, -slew, slew), dz)
+        # saturation: no outward drive when pinned at a rail
+        sat_mask = int_mask | out_mask
+        pinned_hi = sat_mask & (z >= rail) & (dz > 0)
+        pinned_lo = sat_mask & (z <= -rail) & (dz < 0)
+        return jnp.where(pinned_hi | pinned_lo, 0.0, dz)
+
+    def rk4(z, _):
+        k1 = f(z)
+        k2 = f(z + 0.5 * dt * k1)
+        k3 = f(z + 0.5 * dt * k2)
+        k4 = f(z + dt * k3)
+        z = z + (dt / 6.0) * (k1 + 2 * k2 + 2 * k3 + k4)
+        # hard clamp amp states at the rails
+        z = jnp.where(int_mask | out_mask, jnp.clip(z, -rail, rail), z)
+        return z, None
+
+    def chunk(z, _):
+        z, _ = jax.lax.scan(rk4, z, None, length=store_every)
+        return z, z
+
+    n_samples = n_steps // store_every
+    z_final, zs = jax.lax.scan(chunk, z0, None, length=n_samples)
+    return z_final, zs
+
+
+def nonlinear_transient(
+    net: Netlist,
+    opamp: OpAmpSpec = AD712,
+    *,
+    t_end: float = 2e-4,
+    n_samples: int = 400,
+    v_os: np.ndarray | float | None = None,
+    safety: float = 0.4,
+) -> NLTrace:
+    """Integrate the circuit step response from z(0) = 0."""
+    ss = assemble_state_space(net, opamp, v_os=v_os)
+    nz = ss.n_states
+
+    # RK4 stability: dt < ~2.78/|lambda_max|; bound |lambda_max| by the
+    # max absolute row sum (Gershgorin) and add a safety margin.
+    max_rate = float(np.max(np.sum(np.abs(ss.m), axis=1)))
+    dt = safety * 2.78 / max_rate
+    n_steps = max(int(np.ceil(t_end / dt)), n_samples)
+    store_every = max(n_steps // n_samples, 1)
+    n_steps = store_every * n_samples
+
+    int_mask = np.zeros(nz, dtype=bool)
+    int_mask[ss.amp_int_index] = True
+    out_mask = np.zeros(nz, dtype=bool)
+    out_mask[ss.amp_out_index] = True
+
+    z_final, zs = _integrate(
+        jnp.asarray(ss.m),
+        jnp.asarray(ss.c),
+        jnp.asarray(int_mask),
+        jnp.asarray(out_mask),
+        ss.slew,
+        ss.amp_rail,
+        jnp.zeros(nz, dtype=jnp.float64),
+        dt,
+        n_steps,
+        store_every,
+    )
+    zs = np.asarray(zs)
+    z_final = np.asarray(z_final)
+    times = dt * store_every * (1 + np.arange(zs.shape[0]))
+    amp_final = z_final[ss.amp_out_index] if ss.amp_out_index.size else np.zeros(0)
+    saturated = bool(np.any(np.abs(amp_final) >= 0.999 * ss.amp_rail)) if amp_final.size else False
+    return NLTrace(
+        times=times,
+        x=zs[:, : ss.n_unknowns],
+        amp_out=zs[:, ss.amp_out_index] if ss.amp_out_index.size else np.zeros((zs.shape[0], 0)),
+        saturated=saturated,
+        x_final=z_final[: ss.n_unknowns],
+    )

@@ -1,0 +1,11 @@
+"""Data substrate: SPD/SDD system generators (the MATLAB ``sprandsym``
+equivalent used by the paper's studies), FEM assembly, and the sharded
+synthetic LM token pipeline used by training."""
+
+from repro.data.spd import (
+    random_spd,
+    random_sdd,
+    random_spd_fixed_conductance,
+    random_rhs_from_solution,
+)
+from repro.data.fem import poisson_2d

@@ -1,0 +1,54 @@
+"""Finite-element / finite-difference assembly — the paper's motivating
+application domain (Sec. VI: "such as those arising from Finite Element
+Analysis in Computational Solid Mechanics").
+
+:func:`poisson_2d` assembles the 5-point Laplacian stiffness matrix of
+the 2-D Poisson problem on a unit square with Dirichlet boundaries —
+a symmetric *diagonally dominant* system, i.e. exactly the class the
+proposed design solves with a purely passive network at O(1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def poisson_2d(
+    nx: int,
+    ny: int,
+    *,
+    conductance_scale: float = 100e-6,
+    reaction: float = 0.1,
+) -> np.ndarray:
+    """5-point Laplacian + reaction term on an nx-by-ny interior grid
+    (Dirichlet): the discretization of  -div(grad u) + c u = f.
+
+    ``reaction > 0`` gives every column a strict dominance margin (the
+    pure Laplacian's interior rows have zero slack, so any nonzero
+    supply conductance K_s would tip Eq. 25); with it the transformed
+    network is fully passive.  Scaled into the paper's uS range.
+    """
+    n = nx * ny
+    a = np.zeros((n, n))
+
+    def idx(i, j):
+        return i * ny + j
+
+    for i in range(nx):
+        for j in range(ny):
+            k = idx(i, j)
+            a[k, k] = 4.0 + reaction
+            for di, dj in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                ii, jj = i + di, j + dj
+                if 0 <= ii < nx and 0 <= jj < ny:
+                    a[k, idx(ii, jj)] = -1.0
+    return a * conductance_scale
+
+
+def poisson_rhs(nx: int, ny: int, *, scale: float = 1e-6) -> np.ndarray:
+    """Smooth source term f(x, y) = sin(pi x) sin(pi y), scaled to the
+    paper's current range (uA)."""
+    xs = (np.arange(nx) + 1) / (nx + 1)
+    ys = (np.arange(ny) + 1) / (ny + 1)
+    f = np.sin(np.pi * xs)[:, None] * np.sin(np.pi * ys)[None, :]
+    return (f * scale).reshape(-1)

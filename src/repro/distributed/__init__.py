@@ -1,0 +1,11 @@
+"""Distributed runtime: mesh construction, logical sharding rules,
+gradient compression, elastic re-meshing and straggler mitigation."""
+
+from repro.distributed.sharding import (
+    LOGICAL_RULES_SINGLE_POD,
+    LOGICAL_RULES_MULTI_POD,
+    logical_constraint,
+    logical_spec,
+    param_specs,
+    use_rules,
+)

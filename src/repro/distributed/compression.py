@@ -1,0 +1,45 @@
+"""Gradient compression with error feedback (int8, per-tensor scale).
+
+At 1000+-node scale the cross-pod gradient all-reduce is the scaling
+bottleneck (pod-to-pod links are the slowest hop).  We compress the
+gradient contribution to int8 with per-tensor scales and carry the
+quantization residual in an error-feedback buffer (Seide et al. 2014;
+Karimireddy et al. 2019) so the bias vanishes over steps.
+
+In SPMD the reduction itself is XLA-managed; the compression operator
+runs where the gradients live, modeling the wire format.  The operator
+is pure-jit and costs one pass over the gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(grads, error_state):
+    """Quantize (grad + error) to int8, return dequantized grads and the
+    new error residual."""
+    if error_state is None:
+        error_state = init_error_state(grads)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(one, grads, error_state)
+    grads_c = jax.tree.map(lambda t: t[0], out, is_leaf=lambda v: isinstance(v, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda v: isinstance(v, tuple))
+    return grads_c, err
+
+
+def compression_ratio(dtype=jnp.bfloat16) -> float:
+    """Wire-format ratio vs the uncompressed gradient dtype."""
+    return jnp.dtype(dtype).itemsize / 1.0

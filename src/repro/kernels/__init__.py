@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the RNM solver's compute hot-spots.
+
+The paper's crosspoint-array observation (Sec. IV-A4) is the TPU
+bridge: the transformed conductance operator applied to a voltage
+vector *is* an MXU matmul.  Three kernels:
+
+* :mod:`repro.kernels.crosspoint_mvm`   — blocked conductance MVM
+  (the analog array's physics, I = G V), MXU-tiled.
+* :mod:`repro.kernels.transient_step`   — fused transient integration
+  step ``z' = z + dt (M z + c)``: matmul + state update without an HBM
+  round-trip between them.
+* :mod:`repro.kernels.spd_transform`    — the 2n transform's O(n^2)
+  digital cost (column |A| sums, Eqs. 21-22) fused with the K_A/K_B
+  assembly (Eqs. 15-16).
+
+``ops.py`` holds the jit'd public wrappers (auto-padding to block
+multiples, interpret-mode fallback on CPU); ``ref.py`` the pure-jnp
+oracles every kernel is tested against.
+"""
+
+from repro.kernels.ops import (
+    crosspoint_mvm,
+    transient_step,
+    spd_transform_arrays,
+)

@@ -1,0 +1,78 @@
+"""Crosspoint-array MVM kernel: I = G @ V, MXU-tiled.
+
+The analog crossbar performs this for free via Ohm's + Kirchhoff's
+laws; on TPU the conductance array is tiled into MXU-aligned blocks
+held in VMEM, with a float32 accumulator scratch carried across the
+contraction grid dimension.
+
+Grid layout: (m_blocks, n_blocks, k_blocks) — k innermost so the output
+block stays resident in VMEM while partial products accumulate
+(revisiting-output pattern).  VMEM working set per program:
+bm*bk + bk*bn + 2*bm*bn values — 192 KiB at the default f32 128^3
+blocks, comfortably inside the ~16 MiB v5e VMEM budget, leaving room
+for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK = (128, 128, 128)   # (bm, bn, bk) — MXU-aligned
+
+
+def _mvm_kernel(g_ref, v_ref, out_ref, acc_ref, *, n_k_blocks: int):
+    """One (bm, bn) output tile; accumulates over the k grid dim."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU matmul on the current (bm, bk) x (bk, bn) tiles, f32 accum
+    acc_ref[...] += jnp.dot(
+        g_ref[...], v_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k_blocks - 1)
+    def _store():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def crosspoint_mvm_pallas(
+    g: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block: tuple[int, int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``g @ v`` with g (m, k) conductances and v (k, n) voltages.
+
+    Shapes must be multiples of ``block``; :mod:`repro.kernels.ops`
+    handles padding.
+    """
+    m, k = g.shape
+    k2, n = v.shape
+    assert k == k2, (g.shape, v.shape)
+    bm, bn, bk = block
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (g.shape, v.shape, block)
+    n_k_blocks = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_mvm_kernel, n_k_blocks=n_k_blocks),
+        grid=(m // bm, n // bn, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), v.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(g, v)

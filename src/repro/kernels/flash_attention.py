@@ -1,0 +1,161 @@
+"""Pallas flash-attention kernel (TPU target, validated in interpret).
+
+Motivated directly by the §Roofline finding: the pure-JAX blocked
+attention spills every (q_block, kv_block) probability tile to HBM
+(XLA does not fuse matmul -> softmax -> matmul), which dominates the
+memory term of the train/prefill cells.  This kernel keeps the score
+tile, the online-softmax statistics and the output accumulator in VMEM
+scratch across the kv-block grid dimension — attention HBM traffic
+drops to the q/k/v/o tensors themselves.
+
+Layout: q (BH, G, S, D) with BH = batch * kv_heads and G = q-heads per
+kv head (GQA native, K/V never repeated); grid (BH, n_q, n_kv) with kv
+innermost.  Causally unreachable blocks are skipped with ``pl.when``
+(they cost grid iterations, not FLOPs).
+
+VMEM per program: q tile G*qb*D + k/v tiles kb*D + acc G*qb*D(f32)
++ scores G*qb*kb(f32) ~ 1.6 MB at (G=8, qb=kb=256, D=128) — double-
+bufferable within the ~16 MB v5e budget.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    qb: int, kb: int, n_kv: int, causal: bool, window: int, scale: float,
+    t_valid: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal/window reachability of this whole block pair
+    reachable = True
+    if causal:
+        reachable = ki * kb <= qi * qb + qb - 1
+    if window and window > 0:
+        reachable = jnp.logical_and(
+            reachable, ki * kb + kb - 1 > qi * qb - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0]                       # (G, qb, D)
+        k = k_ref[0]                       # (kb, D)
+        v = v_ref[0]                       # (kb, D)
+        g, _, d = q.shape
+
+        s = jax.lax.dot_general(
+            q.reshape(g * qb, d), k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(g, qb, kb) * scale
+
+        qpos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+        kpos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+        ok = kpos < t_valid
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window and window > 0:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok[None], s, NEG_INF)
+
+        m_old = m_ref[...]                 # (G, qb)
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.reshape(g * qb, kb).astype(v.dtype), v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(g, qb, d)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _store():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "interpret"))
+def flash_attention_pallas(
+    q: jnp.ndarray,   # (B, S, H, D)
+    k: jnp.ndarray,   # (B, T, KV, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 256,
+    kv_block: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    _, t, kv, _ = k.shape
+    g = h // kv
+    qb = min(q_block, s)
+    kb = min(kv_block, t)
+    s_pad = (-s) % qb
+    t_pad = (-t) % kb
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    sp, tp = s + s_pad, t + t_pad
+
+    # (B, S, KV, G, D) -> (B*KV, G, S, D); K/V -> (B*KV, T, D)
+    qx = q.reshape(b, sp, kv, g, d).transpose(0, 2, 3, 1, 4).reshape(
+        b * kv, g, sp, d)
+    kx = k.transpose(0, 2, 1, 3).reshape(b * kv, tp, d)
+    vx = v.transpose(0, 2, 1, 3).reshape(b * kv, tp, d)
+
+    n_q, n_kv = sp // qb, tp // kb
+    scale = 1.0 / math.sqrt(d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, qb=qb, kb=kb, n_kv=n_kv, causal=causal,
+            window=window, scale=scale, t_valid=t),
+        grid=(b * kv, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, g, qb, d), lambda bi, qi, ki: (bi, 0, qi, 0)),
+            pl.BlockSpec((1, kb, d), lambda bi, qi, ki: (bi, ki, 0)),
+            pl.BlockSpec((1, kb, d), lambda bi, qi, ki: (bi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, qb, d), lambda bi, qi, ki: (bi, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, qb, d), jnp.float32),
+            pltpu.VMEM((g, qb), jnp.float32),
+            pltpu.VMEM((g, qb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qx.reshape(b * kv, g, sp, d), kx, vx)
+
+    out = out.reshape(b, kv, g, sp, d).transpose(0, 3, 1, 2, 4)
+    out = out.reshape(b, sp, h, d)
+    if s_pad:
+        out = out[:, :s]
+    return out

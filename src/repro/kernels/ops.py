@@ -1,0 +1,118 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+* pad inputs to block multiples (zero padding is exact for all three
+  kernels: matmul/reduction zeros are neutral, and the assembly kernel's
+  padded diagonal region is sliced away);
+* choose interpret mode automatically off-TPU (CPU validation path);
+* present clean shapes (vectors in, vectors out).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import crosspoint_mvm as _mvm
+from repro.kernels import spd_transform as _tr
+from repro.kernels import transient_step as _st
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mults: tuple[int, ...]) -> jnp.ndarray:
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def crosspoint_mvm(
+    g: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block: tuple[int, int, int] = _mvm.DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Crossbar currents I = G @ V.  v may be (k,) or (k, batch)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    m, k = g.shape
+    bm, bn, bk = block
+    gp = _pad_to(g, (bm, bk))
+    vp = _pad_to(v, (bk, bn))
+    out = _mvm.crosspoint_mvm_pallas(gp, vp, block=block, interpret=interpret)
+    out = out[:m, : v.shape[1]]
+    return out[:, 0] if squeeze else out
+
+
+def transient_step(
+    m: jnp.ndarray,
+    z: jnp.ndarray,
+    c: jnp.ndarray,
+    dt: float,
+    *,
+    block: tuple[int, int, int] = _st.DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """One fused Euler step z + dt (M z + c); z may be (n,) or (n, b)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    squeeze = z.ndim == 1
+    if squeeze:
+        z = z[:, None]
+        c = c[:, None]
+    n = m.shape[0]
+    bm, bn, bk = block
+    mp = _pad_to(m, (bm, bk))
+    # square pad: the contraction dim must match the padded row dim
+    size = max(mp.shape)
+    mp = _pad_to(mp, (size, size)) if mp.shape[0] != mp.shape[1] else mp
+    zp = _pad_to(z, (size, bn))
+    cp = _pad_to(c, (size, bn))
+    out = _st.transient_step_pallas(mp, zp, cp, dt, block=block, interpret=interpret)
+    out = out[:n, : z.shape[1]]
+    return out[:, 0] if squeeze else out
+
+
+def spd_transform_arrays(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    supply_v: float = 4.0,
+    block: tuple[int, int] = _tr.DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Kernel-fused proposed transform: returns (K_A, K_B, D, K_s).
+
+    Semantics identical to :func:`repro.core.transform.transform_2n`
+    with ``d_policy="proposed"`` — the Eq. 22 D built from the fused
+    column-|A| reduction; Eqs. 15-16 assembled tile by tile.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    n = a.shape[0]
+    br, bc = block
+    ap = _pad_to(a, (br, bc))
+    size = max(ap.shape)
+    if ap.shape[0] != ap.shape[1]:
+        ap = _pad_to(ap, (size, size))
+
+    colsum = _tr.colabs_pallas(ap, block=block, interpret=interpret)[0, :n]
+    k_s = jnp.abs(b.astype(jnp.float32)) / supply_v                 # Eq. 13
+    d = 0.5 * k_s + 0.5 * colsum                                    # Eq. 22
+    d = d.at[0].add(0.5 * k_s[0])
+
+    dp = _pad_to(d[None, :], (1, bc))[0]
+    ksp = _pad_to(k_s[None, :], (1, bc))[0]
+    ka, kb = _tr.assemble_pallas(
+        ap, dp.astype(ap.dtype), ksp.astype(ap.dtype), block=block, interpret=interpret
+    )
+    return ka[:n, :n], kb[:n, :n], d, k_s

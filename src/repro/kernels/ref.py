@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def crosspoint_mvm_ref(g: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """I = G @ V with f32 accumulation."""
+    return jnp.dot(g, v, preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+def transient_step_ref(
+    m: jnp.ndarray, z: jnp.ndarray, c: jnp.ndarray, dt: float
+) -> jnp.ndarray:
+    """Z' = Z + dt (M Z + C) with f32 accumulation."""
+    mz = jnp.dot(m, z, preferred_element_type=jnp.float32)
+    out = z.astype(jnp.float32) + dt * (mz + c.astype(jnp.float32))
+    return out.astype(z.dtype)
+
+
+def colabs_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """(1, n) column absolute sums, f32."""
+    return jnp.sum(jnp.abs(a.astype(jnp.float32)), axis=0, keepdims=True)
+
+
+def assemble_ref(
+    a: jnp.ndarray, d: jnp.ndarray, k_s: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eqs. 15-16 in f32, cast back to a.dtype."""
+    a32 = a.astype(jnp.float32)
+    abs_a = jnp.abs(a32)
+    d = d.reshape(-1).astype(jnp.float32)
+    k_s = k_s.reshape(-1).astype(jnp.float32)
+    ka = jnp.diag(d - k_s) + 0.5 * (a32 - abs_a)
+    kb = jnp.diag(d) - 0.5 * (a32 + abs_a)
+    return ka.astype(a.dtype), kb.astype(a.dtype)

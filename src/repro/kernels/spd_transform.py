@@ -1,0 +1,129 @@
+"""Fused 2n-transform kernels (Eqs. 15-16 + the column-|A| reduction).
+
+The paper flags the column absolute-sum as the transform's only O(n^2)
+digital cost (Sec. V) and proposes amortizing it.  On TPU we fuse it:
+
+* :func:`colabs_pallas`    — sum_j |A_ji| per column, accumulated in a
+  VMEM scratch across the row-block grid dimension (one streaming pass
+  over A: memory-bound, bandwidth-roofline).
+* :func:`assemble_pallas`  — K_A and K_B tiles produced in one pass
+  over A (Eqs. 15-16): both outputs share the |A| computation and the
+  D/K_s diagonal broadcast, so A is read exactly once more.
+
+The diagonal placement uses global row/col indices derived from the
+program ids (broadcasted_iota + block offsets), keeping the kernel
+shape-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK = (128, 128)
+
+
+def _colabs_kernel(a_ref, out_ref, acc_ref, *, n_row_blocks: int):
+    i = pl.program_id(1)   # row-block index (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.sum(
+        jnp.abs(a_ref[...].astype(jnp.float32)), axis=0, keepdims=True
+    )
+
+    @pl.when(i == n_row_blocks - 1)
+    def _store():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def colabs_pallas(
+    a: jnp.ndarray,
+    *,
+    block: tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Column absolute sums: out[j] = sum_i |A[i, j]|, shape (1, n)."""
+    m, n = a.shape
+    br, bc = block
+    assert m % br == 0 and n % bc == 0, (a.shape, block)
+    n_row_blocks = m // br
+
+    return pl.pallas_call(
+        functools.partial(_colabs_kernel, n_row_blocks=n_row_blocks),
+        grid=(n // bc, n_row_blocks),
+        in_specs=[pl.BlockSpec((br, bc), lambda j, i: (i, j))],
+        out_specs=pl.BlockSpec((1, bc), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bc), jnp.float32)],
+        interpret=interpret,
+    )(a)
+
+
+def _assemble_kernel(a_ref, d_ref, ks_ref, ka_ref, kb_ref, *, block: tuple[int, int]):
+    br, bc = block
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    a = a_ref[...].astype(jnp.float32)
+    abs_a = jnp.abs(a)
+
+    # global (row, col) indices of this tile -> diagonal mask
+    rows = jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0) + i * br
+    cols = jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1) + j * bc
+    on_diag = (rows == cols).astype(jnp.float32)
+
+    d_row = d_ref[...].astype(jnp.float32)     # (1, bc) — D col-aligned
+    ks_row = ks_ref[...].astype(jnp.float32)   # (1, bc)
+
+    # Eq. 15: K_A = diag(D) + 0.5 (A - |A|) - diag(K_s)
+    ka = on_diag * (d_row - ks_row) + 0.5 * (a - abs_a)
+    # Eq. 16: K_B = diag(D) - 0.5 (A + |A|)
+    kb = on_diag * d_row - 0.5 * (a + abs_a)
+
+    ka_ref[...] = ka.astype(ka_ref.dtype)
+    kb_ref[...] = kb.astype(kb_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def assemble_pallas(
+    a: jnp.ndarray,
+    d: jnp.ndarray,
+    k_s: jnp.ndarray,
+    *,
+    block: tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """K_A, K_B tiles from A and the (1, n) D / K_s row vectors."""
+    n, n2 = a.shape
+    assert n == n2
+    br, bc = block
+    assert n % br == 0 and n % bc == 0, (a.shape, block)
+    d = d.reshape(1, n)
+    k_s = k_s.reshape(1, n)
+
+    return pl.pallas_call(
+        functools.partial(_assemble_kernel, block=block),
+        grid=(n // br, n // bc),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), a.dtype),
+            jax.ShapeDtypeStruct((n, n), a.dtype),
+        ],
+        interpret=interpret,
+    )(a, d, k_s)

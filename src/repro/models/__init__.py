@@ -1,0 +1,16 @@
+"""Model substrate: composable JAX modules for the assigned architectures.
+
+Families:
+* dense decoder (llama-style GQA; parallel-block and qk-norm variants)
+* MoE decoder (top-k routing; TP and EP expert parallelism)
+* Mamba2 / SSD (attention-free state space, chunked scan)
+* hybrid (Mamba2 backbone + weight-shared attention block — Zamba2)
+* encoder-decoder (Whisper backbone; conv frontend stubbed)
+* VLM (patch-embedding stub prefix + dense decoder — InternVL2)
+
+Everything is pure JAX over parameter pytrees with explicit dtypes and
+``lax.scan`` over stacked layer parameters (O(1) compile time in depth).
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_params, model_flops

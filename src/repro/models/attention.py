@@ -1,0 +1,184 @@
+"""Attention: memory-efficient block attention (train/prefill) and
+cached decode.
+
+:func:`flash_attention` is a pure-JAX online-softmax implementation:
+the (q-block, kv-block) pairs are enumerated *statically* (only the
+causally/window-reachable pairs), and a single ``lax.scan`` walks them
+carrying the running (output, max, denominator).  Peak memory is one
+(q_block, kv_block) score tile per step instead of the full S x T score
+matrix — required for the 32k-prefill shapes, and exactly the
+recompute-friendly structure ``jax.checkpoint`` wants for training.
+
+GQA is handled natively: q heads are grouped over the kv heads, so the
+einsums keep a (kv_head, group) split and never materialize repeated
+K/V.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+NEG_INF = -1e30
+
+
+def _block_pairs(nq: int, nk: int, *, causal: bool, window_blocks: int) -> list[tuple[int, int]]:
+    """Statically enumerate reachable (q_block, kv_block) pairs."""
+    pairs = []
+    for qi in range(nq):
+        for ki in range(nk):
+            if causal and ki > qi:
+                continue
+            if window_blocks > 0 and ki < qi - window_blocks:
+                continue
+            pairs.append((qi, ki))
+    return pairs
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 512,
+    kv_block: int = 512,
+    p_dtype=None,
+) -> jnp.ndarray:
+    """q: (B, S, H, D); k, v: (B, T, KV, D); H = KV * G.  -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    _, t, kv, _ = k.shape
+    g = h // kv
+    assert h == kv * g, (h, kv)
+    qb = min(q_block, s)
+    kb = min(kv_block, t)
+    # pad ragged lengths up to block multiples; padded kv positions are
+    # masked out, padded q rows sliced off at the end
+    s_orig, t_orig = s, t
+    s_pad = (-s) % qb
+    t_pad = (-t) % kb
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        s += s_pad
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        t += t_pad
+    masked = causal or bool(window) or bool(t_pad)
+    nq, nk = s // qb, t // kb
+    scale = 1.0 / math.sqrt(d)
+
+    window_blocks = -1
+    if window and window > 0:
+        window_blocks = (window + kb - 1) // kb
+    pairs = _block_pairs(nq, nk, causal=causal, window_blocks=window_blocks)
+    pair_arr = jnp.asarray(pairs, dtype=jnp.int32)      # (P, 2)
+
+    qg = q.reshape(b, s, kv, g, d)
+
+    zero = jnp.asarray(0, jnp.int32)
+
+    def body(carry, pair):
+        o_acc, m_acc, l_acc = carry
+        qi, ki = pair[0], pair[1]
+        q_blk = jax.lax.dynamic_slice(
+            qg, (zero, qi * qb, zero, zero, zero), (b, qb, kv, g, d)
+        )
+        k_blk = jax.lax.dynamic_slice(
+            k, (zero, ki * kb, zero, zero), (b, kb, kv, d))
+        v_blk = jax.lax.dynamic_slice(
+            v, (zero, ki * kb, zero, zero), (b, kb, kv, d))
+
+        # scores (b, kv, g, qb, kb), f32
+        s_blk = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", q_blk, k_blk, preferred_element_type=jnp.float32
+        ) * scale
+
+        if masked:
+            qpos = qi * qb + jnp.arange(qb, dtype=jnp.int32)
+            kpos = ki * kb + jnp.arange(kb, dtype=jnp.int32)
+            ok = jnp.ones((qb, kb), dtype=bool)
+            if causal:
+                ok &= kpos[None, :] <= qpos[:, None]
+            if window and window > 0:
+                ok &= kpos[None, :] > qpos[:, None] - window
+            if t_pad:
+                ok &= (kpos < t_orig)[None, :]
+            s_blk = jnp.where(ok[None, None, None], s_blk, NEG_INF)
+
+        m_blk = jnp.max(s_blk, axis=-1)                             # (b,kv,g,qb)
+        m_old = jax.lax.dynamic_slice(
+            m_acc, (zero, zero, zero, qi * qb), (b, kv, g, qb))
+        l_old = jax.lax.dynamic_slice(
+            l_acc, (zero, zero, zero, qi * qb), (b, kv, g, qb))
+        o_old = jax.lax.dynamic_slice(
+            o_acc, (zero, qi * qb, zero, zero, zero), (b, qb, kv, g, d)
+        )
+
+        m_new = jnp.maximum(m_old, m_blk)
+        alpha = jnp.exp(m_old - m_new)                              # rescale old
+        p = jnp.exp(s_blk - m_new[..., None])                       # (b,kv,g,qb,kb)
+        l_new = l_old * alpha + jnp.sum(p, axis=-1)
+        # optional: cast the probability tile down (halves the block-
+        # score HBM spill; the f32 row-sum above keeps the softmax exact)
+        p_mm = p.astype(p_dtype) if p_dtype is not None else p
+        pv = jnp.einsum(
+            "bhgqk,bkhd->bqhgd", p_mm, v_blk,
+            preferred_element_type=jnp.float32,
+        )
+        o_new = o_old * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+
+        o_acc = jax.lax.dynamic_update_slice(
+            o_acc, o_new, (zero, qi * qb, zero, zero, zero))
+        m_acc = jax.lax.dynamic_update_slice(
+            m_acc, m_new, (zero, zero, zero, qi * qb))
+        l_acc = jax.lax.dynamic_update_slice(
+            l_acc, l_new, (zero, zero, zero, qi * qb))
+        return (o_acc, m_acc, l_acc), None
+
+    o0 = jnp.zeros((b, s, kv, g, d), dtype=jnp.float32)
+    m0 = jnp.full((b, kv, g, s), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, kv, g, s), dtype=jnp.float32)
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), pair_arr)
+
+    l = jnp.maximum(l, 1e-30)
+    out = o / l.transpose(0, 3, 1, 2)[..., None]
+    out = out.reshape(b, s, h, d)
+    if s_pad:
+        out = out[:, :s_orig]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+) -> jnp.ndarray:
+    """Single-step cached attention.
+
+    q: (B, 1, H, D); caches: (B, S, KV, D); pos: () or (B,) current
+    length — keys at index >= pos are masked out.
+    """
+    b, _, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kv, g, d)
+
+    scores = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    valid = kpos[None, :] <= jnp.reshape(pos, (-1, 1))          # (B or 1, S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", p, v_cache, preferred_element_type=jnp.float32
+    )
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,488 @@
+"""Per-layer blocks: parameter initializers + forward functions.
+
+Parameters are plain dicts of arrays; every init function is jittable
+(and therefore ``jax.eval_shape``-able — the dry-run instantiates the
+full-size models abstractly, never allocating).
+
+Each init also has a parallel ``*_axes`` function returning the same
+pytree structure with *logical axis* tuples, consumed by
+``distributed.sharding.param_specs`` to derive PartitionSpecs.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import boundary_pin, logical_constraint as lc
+from repro.models import attention as attn_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    gelu_mlp,
+    layer_norm,
+    rms_norm,
+    swiglu_mlp,
+)
+from repro.models.moe import moe_ffn
+
+
+def _normal(key, shape, dtype, std: float):
+    return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (dense family; also the shared block of the hybrid family)
+# --------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig, out_scale: float) -> dict:
+    """Head-structured projections: (d, heads, dh) — the head axis is a
+    real array axis so TP sharding can never split a head."""
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _normal(ks[0], (d, h, dh), dt, d ** -0.5),
+        "wk": _normal(ks[1], (d, kv, dh), dt, d ** -0.5),
+        "wv": _normal(ks[2], (d, kv, dh), dt, d ** -0.5),
+        "wo": _normal(ks[3], (h, dh, d), dt, out_scale * (h * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def attn_axes(cfg: ModelConfig) -> dict:
+    p = {
+        "wq": ("embed", "q_heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("q_heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    return p
+
+
+def attn_forward(
+    x: jnp.ndarray,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,
+    causal: bool = True,
+    use_rope: bool = True,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence attention.  Returns (out, (k, v)) — k/v are the
+    cache entries a prefill caller stores."""
+    b, s, d = x.shape
+    # enter the attention layout on the small 3D hidden, so q/k/v are
+    # *born* in it — resharding the 4D projections (or their cotangents)
+    # makes the partitioner fall back to full replication (30 GB AGs)
+    x = boundary_pin(x, ("attn_batch", None, None))
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = lc(q, ("attn_batch", None, "q_heads", "head_dim"))
+    k = lc(k, ("attn_batch", None, "kv_heads", "head_dim"))
+    v = lc(v, ("attn_batch", None, "kv_heads", "head_dim"))
+    o = attn_lib.flash_attention(
+        q, k, v, causal=causal, window=cfg.sliding_window,
+        p_dtype=jnp.bfloat16 if cfg.attn_p_bf16 else None,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (k, v)
+
+
+def attn_decode(
+    x: jnp.ndarray,
+    p: dict,
+    cfg: ModelConfig,
+    cache_k: jnp.ndarray,
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token step; cache_k/v: (B, S, KV, dh); pos: () int32."""
+    b, _, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos_arr = jnp.reshape(pos, (1,))
+    q = apply_rope(q, pos_arr[None, :], cfg.rope_theta)
+    k = apply_rope(k, pos_arr[None, :], cfg.rope_theta)
+    zero = jnp.asarray(0, pos.dtype) if hasattr(pos, "dtype") else 0
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (zero, pos, zero, zero))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (zero, pos, zero, zero))
+    o = attn_lib.decode_attention(q, cache_k, cache_v, pos)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# dense / moe decoder blocks
+# --------------------------------------------------------------------------
+
+def init_dense_block(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.p_dtype()
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    ka, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "attn": init_attn(ka, cfg, out_scale),
+        "ln2": jnp.ones((d,), dt),
+        "mlp": {
+            "w_gate": _normal(k1, (d, f), dt, d ** -0.5),
+            "w_up": _normal(k2, (d, f), dt, d ** -0.5),
+            "w_down": _normal(k3, (f, d), dt, out_scale * f ** -0.5),
+        },
+    }
+
+
+def dense_block_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": (None,),
+        "attn": attn_axes(cfg),
+        "ln2": (None,),
+        "mlp": {
+            "w_gate": ("embed", "ff"),
+            "w_up": ("embed", "ff"),
+            "w_down": ("ff", "embed"),
+        },
+    }
+
+
+def dense_block_forward(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig, positions: jnp.ndarray,
+    *, causal: bool = True,
+) -> tuple[jnp.ndarray, tuple]:
+    x = lc(x, ("batch", None, None))
+    if cfg.parallel_block:
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, kvc = attn_forward(h, p["attn"], cfg, positions=positions, causal=causal)
+        m = swiglu_mlp(h, p["mlp"])
+        out = x + a + m
+    else:
+        a, kvc = attn_forward(
+            rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg,
+            positions=positions, causal=causal,
+        )
+        # pin the residual layout at the attention/MLP boundary: without
+        # this the partitioner resolves the attn-batch-layout mismatch
+        # INSIDE the MLP backward by replicating the d_ff hidden (an
+        # 85 GB all-gather per layer on yi-34b).  Conditional: a no-op
+        # for heads-mode archs, where it costs 8-18% (§Perf P2b).
+        x = boundary_pin(x + a, ("batch", None, None))
+        m = swiglu_mlp(rms_norm(x, p["ln2"], cfg.norm_eps), p["mlp"])
+        out = x + m
+    return lc(out, ("batch", None, None)), kvc
+
+
+def dense_block_decode(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig,
+    cache_k, cache_v, pos,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    if cfg.parallel_block:
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, ck, cv = attn_decode(h, p["attn"], cfg, cache_k, cache_v, pos)
+        m = swiglu_mlp(h, p["mlp"])
+        return x + a + m, ck, cv
+    a, ck, cv = attn_decode(
+        rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, cache_k, cache_v, pos
+    )
+    x = x + a
+    m = swiglu_mlp(rms_norm(x, p["ln2"], cfg.norm_eps), p["mlp"])
+    return x + m, ck, cv
+
+
+def init_moe_block(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.p_dtype()
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    ka, kr, k1, k2, k3 = jax.random.split(key, 5)
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "attn": init_attn(ka, cfg, out_scale),
+        "ln2": jnp.ones((d,), dt),
+        "moe": {
+            "w_router": _normal(kr, (d, e), jnp.float32, d ** -0.5),
+            "w_gate": _normal(k1, (e, d, f), dt, d ** -0.5),
+            "w_up": _normal(k2, (e, d, f), dt, d ** -0.5),
+            "w_down": _normal(k3, (e, f, d), dt, out_scale * f ** -0.5),
+        },
+    }
+
+
+def moe_block_axes(cfg: ModelConfig) -> dict:
+    ep = cfg.moe_parallel == "ep"
+    expert_axis = "expert"      # rules map it to "model" for EP configs
+    ff_axis = None if ep else "ff"
+    return {
+        "ln1": (None,),
+        "attn": attn_axes(cfg),
+        "ln2": (None,),
+        "moe": {
+            "w_router": ("embed", None),
+            "w_gate": (expert_axis, "embed", ff_axis),
+            "w_up": (expert_axis, "embed", ff_axis),
+            "w_down": (expert_axis, ff_axis, "embed"),
+        },
+    }
+
+
+def moe_block_forward(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig, positions: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    x = lc(x, ("batch", None, None))
+    a, _ = attn_forward(
+        rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, positions=positions
+    )
+    x = boundary_pin(x + a, ("batch", None, None))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    b, s, d = h.shape
+    if cfg.dispatch_groups > 1:
+        from repro.models.moe import moe_ffn_grouped
+
+        y, aux = moe_ffn_grouped(
+            h.reshape(b * s, d), p["moe"],
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+            groups=cfg.dispatch_groups,
+        )
+    else:
+        y, aux = moe_ffn(
+            h.reshape(b * s, d), p["moe"],
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+        )
+    return lc(x + y.reshape(b, s, d), ("batch", None, None)), aux
+
+
+def moe_block_decode(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig, cache_k, cache_v, pos,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    a, ck, cv = attn_decode(
+        rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, cache_k, cache_v, pos
+    )
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    b, _, d = h.shape
+    y, _ = moe_ffn(
+        h.reshape(b, d), p["moe"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+        capacity_factor=2.0,
+    )
+    return x + y.reshape(b, 1, d), ck, cv
+
+
+# --------------------------------------------------------------------------
+# mamba2 block (ssm / hybrid families)
+# --------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    dt = cfg.p_dtype()
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    dt_init = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(
+            k3, (h,), jnp.float32,
+            minval=math.log(1e-3), maxval=math.log(1e-1)))
+    ))
+    return {
+        "ln": jnp.ones((d,), dt),
+        # split in-projection: TP on "inner" never cuts a segment
+        "w_z": _normal(k1, (d, d_in), dt, d ** -0.5),
+        "w_x": _normal(k5, (d, d_in), dt, d ** -0.5),
+        "w_bc": _normal(k6, (d, 2 * g * n), dt, d ** -0.5),
+        "w_dt": _normal(k7, (d, h), dt, d ** -0.5),
+        "conv_x_w": _normal(k2, (cfg.ssm_conv, d_in), jnp.float32, d_in ** -0.5),
+        "conv_x_b": jnp.zeros((d_in,), jnp.float32),
+        "conv_bc_w": _normal(
+            k2, (cfg.ssm_conv, 2 * g * n), jnp.float32, (2 * g * n) ** -0.5),
+        "conv_bc_b": jnp.zeros((2 * g * n,), jnp.float32),
+        "dt_bias": dt_init,
+        "a_log": jnp.log(
+            1.0 + 15.0 * jax.random.uniform(k4, (h,), jnp.float32)
+        ),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dt),
+        "w_out": _normal(k2, (d_in, d), dt, out_scale * d_in ** -0.5),
+    }
+
+
+def mamba_block_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ln": (None,),
+        "w_z": ("embed", "inner"),
+        "w_x": ("embed", "inner"),
+        "w_bc": ("embed", None),
+        "w_dt": ("embed", None),
+        "conv_x_w": (None, "inner"),
+        "conv_x_b": ("inner",),
+        "conv_bc_w": (None, None),
+        "conv_bc_b": (None,),
+        "dt_bias": (None,),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "norm_scale": ("inner",),
+        "w_out": ("inner", "embed"),
+    }
+
+
+def mamba_block_forward(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    from repro.models.ssm import mamba2_forward
+
+    x = lc(x, ("batch", None, None))
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y, state = mamba2_forward(h, p, cfg)
+    return lc(x + y, ("batch", None, None)), state
+
+
+def mamba_block_decode(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig, conv_state, ssm_state
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    from repro.models.ssm import mamba2_decode
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y, conv_state, ssm_state = mamba2_decode(h, p, cfg, conv_state, ssm_state)
+    return x + y, conv_state, ssm_state
+
+
+# --------------------------------------------------------------------------
+# whisper-style encoder/decoder blocks (LayerNorm + biases + GELU)
+# --------------------------------------------------------------------------
+
+def _init_ln(d, dt):
+    return {"scale": jnp.ones((d,), dt), "bias": jnp.zeros((d,), dt)}
+
+
+def init_encdec_block(key, cfg: ModelConfig, *, cross: bool) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.p_dtype()
+    out_scale = 1.0 / math.sqrt(2 * (cfg.n_layers + cfg.n_enc_layers))
+    ka, kc, k1, k2 = jax.random.split(key, 4)
+    p = {
+        "ln1": _init_ln(d, dt),
+        "attn": init_attn(ka, cfg, out_scale),
+        "ln2": _init_ln(d, dt),
+        "mlp": {
+            "w_up": _normal(k1, (d, f), dt, d ** -0.5),
+            "b_up": jnp.zeros((f,), dt),
+            "w_down": _normal(k2, (f, d), dt, out_scale * f ** -0.5),
+            "b_down": jnp.zeros((d,), dt),
+        },
+    }
+    if cross:
+        p["ln_x"] = _init_ln(d, dt)
+        p["xattn"] = init_attn(kc, cfg, out_scale)
+    return p
+
+
+def encdec_block_axes(cfg: ModelConfig, *, cross: bool) -> dict:
+    ln = {"scale": (None,), "bias": (None,)}
+    p = {
+        "ln1": dict(ln),
+        "attn": attn_axes(cfg),
+        "ln2": dict(ln),
+        "mlp": {
+            "w_up": ("embed", "ff"),
+            "b_up": ("ff",),
+            "w_down": ("ff", "embed"),
+            "b_down": (None,),
+        },
+    }
+    if cross:
+        p["ln_x"] = dict(ln)
+        p["xattn"] = attn_axes(cfg)
+    return p
+
+
+def encoder_block_forward(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig, positions: jnp.ndarray
+) -> jnp.ndarray:
+    a, _ = attn_forward(
+        layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"], cfg.norm_eps),
+        p["attn"], cfg, positions=positions, causal=False, use_rope=False,
+    )
+    x = x + a
+    m = gelu_mlp(layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"], cfg.norm_eps),
+                 p["mlp"])
+    return x + m
+
+
+def cross_attn(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig, enc_k: jnp.ndarray, enc_v: jnp.ndarray
+) -> jnp.ndarray:
+    """Cross-attention with precomputed encoder K/V (B, T, KV, dh)."""
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    o = attn_lib.flash_attention(q, enc_k, enc_v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def encdec_cross_kv(p: dict, cfg: ModelConfig, enc_out: jnp.ndarray):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def decoder_block_forward(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig, positions: jnp.ndarray,
+    enc_out: jnp.ndarray,
+) -> tuple[jnp.ndarray, tuple]:
+    a, kvc = attn_forward(
+        layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"], cfg.norm_eps),
+        p["attn"], cfg, positions=positions, causal=True, use_rope=False,
+    )
+    x = x + a
+    xk, xv = encdec_cross_kv(p["xattn"], cfg, enc_out)
+    c = cross_attn(
+        layer_norm(x, p["ln_x"]["scale"], p["ln_x"]["bias"], cfg.norm_eps),
+        p["xattn"], cfg, xk, xv,
+    )
+    x = x + c
+    m = gelu_mlp(layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"], cfg.norm_eps),
+                 p["mlp"])
+    return x + m, kvc
+
+
+def decoder_block_decode(
+    x: jnp.ndarray, p: dict, cfg: ModelConfig,
+    cache_k, cache_v, xk, xv, pos,
+):
+    """One decoder token step with self-cache + precomputed cross K/V."""
+    b = x.shape[0]
+    hx = layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", hx, p["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", hx, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", hx, p["attn"]["wv"])
+    zero = jnp.asarray(0, pos.dtype) if hasattr(pos, "dtype") else 0
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (zero, pos, zero, zero))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (zero, pos, zero, zero))
+    o = attn_lib.decode_attention(q, cache_k, cache_v, pos)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+
+    hq = layer_norm(x, p["ln_x"]["scale"], p["ln_x"]["bias"], cfg.norm_eps)
+    qx = jnp.einsum("bsd,dhk->bshk", hq, p["xattn"]["wq"])
+    t = xk.shape[1]
+    ox = attn_lib.decode_attention(qx, xk, xv, jnp.asarray(t - 1, jnp.int32))
+    x = x + jnp.einsum("bshk,hkd->bsd", ox, p["xattn"]["wo"])
+
+    m = gelu_mlp(layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"], cfg.norm_eps),
+                 p["mlp"])
+    return x + m, cache_k, cache_v

@@ -1,0 +1,92 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings.
+
+Pure functions over parameter dicts; every op takes/returns the compute
+dtype from the config, with norm/softmax statistics in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def rope_frequencies(d_head: int, theta: float) -> jnp.ndarray:
+    """(d_head/2,) inverse frequencies, float32."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., seq, heads, d_head); positions: (..., seq)."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)                     # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, d/2)
+    cos = jnp.cos(angles)[..., None, :]                         # (..., seq, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_mlp(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    """LLaMA-style gated MLP: w_down(silu(w_gate x) * w_up x)."""
+    g = jnp.dot(x, p["w_gate"])
+    u = jnp.dot(x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.dot(h, p["w_down"])
+
+
+def gelu_mlp(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    """Whisper-style MLP: w_down(gelu(w_up x + b_up)) + b_down."""
+    h = jnp.dot(x, p["w_up"]) + p["b_up"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return jnp.dot(h, p["w_down"]) + p["b_down"].astype(x.dtype)
+
+
+def embed_tokens(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Logits over the padded vocab (mask/slice at the loss)."""
+    return jnp.dot(x, table)
+
+
+def sinusoid_positions(length: int, d_model: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal positions, float32 (length, d)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    args = jnp.arange(length, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=1)
+
+
+def sinusoid_position_at(pos: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Single sinusoidal position embedding at runtime index ``pos`` (d,)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    args = pos.astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=0)

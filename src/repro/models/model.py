@@ -1,0 +1,534 @@
+"""Top-level models: init, train forward, prefill and decode per family.
+
+Layer stacks are ``lax.scan`` over stacked parameters (O(1) compile time
+in depth) with ``jax.checkpoint`` on the block body (remat).  All
+functions are pure; caches are explicit pytrees so the serving layer
+and the dry-run treat them as ordinary inputs/outputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _ckpt(fn, cfg):
+    """Block remat with the config's policy."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models import blocks as B
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_tokens, rms_norm, sinusoid_positions, unembed
+
+
+# ===========================================================================
+# parameter initialization (jittable -> eval_shape-able for the dry-run)
+# ===========================================================================
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dt = cfg.p_dtype()
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: dict[str, Any] = {
+        "embed": (0.02 * jax.random.normal(
+            keys[0], (cfg.vocab_padded, d), jnp.float32)).astype(dt),
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (0.02 * jax.random.normal(
+            keys[1], (d, cfg.vocab_padded), jnp.float32)).astype(dt)
+
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = _stack_init(
+            lambda k: B.init_dense_block(k, cfg), keys[2], cfg.n_layers)
+    elif cfg.family == "moe":
+        params["blocks"] = _stack_init(
+            lambda k: B.init_moe_block(k, cfg), keys[2], cfg.n_layers)
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack_init(
+            lambda k: B.init_mamba_block(k, cfg), keys[2], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stack_init(
+            lambda k: B.init_mamba_block(k, cfg), keys[2], cfg.n_layers)
+        params["shared_attn"] = B.init_dense_block(keys[3], cfg)
+    elif cfg.family == "encdec":
+        params["enc_blocks"] = _stack_init(
+            lambda k: B.init_encdec_block(k, cfg, cross=False),
+            keys[2], cfg.n_enc_layers)
+        params["dec_blocks"] = _stack_init(
+            lambda k: B.init_encdec_block(k, cfg, cross=True),
+            keys[3], cfg.n_layers)
+        params["enc_final_norm"] = jnp.ones((d,), dt)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def param_logical_axes(cfg: ModelConfig) -> dict:
+    """Same pytree structure as init_params, leaves = logical axis tuples."""
+    axes: dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+
+    def stacked(tree):
+        return jax.tree.map(
+            lambda t: ("layers",) + t, tree,
+            is_leaf=lambda v: isinstance(v, tuple))
+
+    if cfg.family in ("dense", "vlm"):
+        axes["blocks"] = stacked(B.dense_block_axes(cfg))
+    elif cfg.family == "moe":
+        axes["blocks"] = stacked(B.moe_block_axes(cfg))
+    elif cfg.family == "ssm":
+        axes["blocks"] = stacked(B.mamba_block_axes(cfg))
+    elif cfg.family == "hybrid":
+        axes["blocks"] = stacked(B.mamba_block_axes(cfg))
+        axes["shared_attn"] = B.dense_block_axes(cfg)
+    elif cfg.family == "encdec":
+        axes["enc_blocks"] = stacked(B.encdec_block_axes(cfg, cross=False))
+        axes["dec_blocks"] = stacked(B.encdec_block_axes(cfg, cross=True))
+        axes["enc_final_norm"] = (None,)
+    return axes
+
+
+# ===========================================================================
+# train forward (full sequence -> logits)
+# ===========================================================================
+
+def _logits(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, table)
+    return lc(logits, ("batch", None, "vocab"))
+
+
+def _hybrid_groups(cfg: ModelConfig) -> tuple[int, int]:
+    g = cfg.n_layers // cfg.attn_every
+    rem = cfg.n_layers - g * cfg.attn_every
+    return g, rem
+
+
+def forward_train(params: dict, batch: dict, cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B, S_text, vocab_padded), aux_loss scalar)."""
+    tokens = batch["tokens"]
+    bsz, s_text = tokens.shape
+    x = embed_tokens(tokens, params["embed"])
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    s_total = x.shape[1]
+    positions = jnp.broadcast_to(
+        jnp.arange(s_total, dtype=jnp.int32)[None, :], (bsz, s_total))
+    x = lc(x, ("batch", None, None))
+
+    if cfg.family in ("dense", "vlm"):
+        block = functools.partial(B.dense_block_forward, cfg=cfg, positions=positions)
+
+        def body(carry, p):
+            out, _ = _ckpt(lambda c, pp: block(c, pp), cfg)(carry, p)
+            return out, None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    elif cfg.family == "moe":
+        def body(carry, p):
+            x, aux = carry
+            out, a = _ckpt(
+                lambda c, pp: B.moe_block_forward(c, pp, cfg, positions),
+                cfg)(x, p)
+            return (out, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+
+    elif cfg.family == "ssm":
+        def body(carry, p):
+            out, _ = _ckpt(
+                lambda c, pp: B.mamba_block_forward(c, pp, cfg), cfg)(carry, p)
+            return out, None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    elif cfg.family == "hybrid":
+        g, rem = _hybrid_groups(cfg)
+        shared = params["shared_attn"]
+        grouped = jax.tree.map(
+            lambda t: t[: g * cfg.attn_every].reshape(
+                (g, cfg.attn_every) + t.shape[1:]),
+            params["blocks"])
+        tail = jax.tree.map(lambda t: t[g * cfg.attn_every:], params["blocks"])
+
+        def mamba_body(carry, p):
+            out, _ = _ckpt(
+                lambda c, pp: B.mamba_block_forward(c, pp, cfg), cfg)(carry, p)
+            return out, None
+
+        def group_body(carry, p_group):
+            h, _ = _ckpt(
+                lambda c: B.dense_block_forward(c, shared, cfg, positions),
+                cfg)(carry)
+            h, _ = jax.lax.scan(mamba_body, h, p_group)
+            return h, None
+
+        x, _ = jax.lax.scan(group_body, x, grouped)
+        if rem:
+            x, _ = jax.lax.scan(mamba_body, x, tail)
+
+    elif cfg.family == "encdec":
+        frames = batch["frames"].astype(x.dtype)
+        enc_pos = sinusoid_positions(frames.shape[1], cfg.d_model)
+        h = frames + enc_pos[None].astype(x.dtype)
+        epos = jnp.broadcast_to(
+            jnp.arange(frames.shape[1], dtype=jnp.int32)[None, :],
+            (bsz, frames.shape[1]))
+
+        def enc_body(carry, p):
+            return _ckpt(
+                lambda c, pp: B.encoder_block_forward(c, pp, cfg, epos),
+                cfg)(carry, p), None
+
+        h, _ = jax.lax.scan(enc_body, h, params["enc_blocks"])
+        enc_out = rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+        dec_pos_emb = sinusoid_positions(s_text, cfg.d_model)
+        x = x + dec_pos_emb[None].astype(x.dtype)
+
+        def dec_body(carry, p):
+            out, _ = _ckpt(
+                lambda c, pp: B.decoder_block_forward(
+                    c, pp, cfg, positions, enc_out), cfg)(carry, p)
+            return out, None
+
+        x, _ = jax.lax.scan(dec_body, x, params["dec_blocks"])
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "vlm":
+        x = x[:, -s_text:, :]
+    return _logits(params, cfg, x), aux
+
+
+# ===========================================================================
+# serving: prefill + decode
+# ===========================================================================
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Abstract-friendly cache allocation (zeros)."""
+    dt = cfg.act_dtype()
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.family in ("dense", "moe", "vlm"):
+        shape = (cfg.n_layers, batch, max_seq, kv, dh)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if cfg.family == "ssm":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "conv": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), dt),
+            "ssm": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                 cfg.ssm_state), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        g, _ = _hybrid_groups(cfg)
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "conv": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), dt),
+            "ssm": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                 cfg.ssm_state), jnp.float32),
+            "k": jnp.zeros((g, batch, max_seq, kv, dh), dt),
+            "v": jnp.zeros((g, batch, max_seq, kv, dh), dt),
+        }
+    if cfg.family == "encdec":
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_seq, kv, dh), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, kv, dh), dt),
+            "xk": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, kv, dh), dt),
+            "xv": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, kv, dh), dt),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(
+    params: dict,
+    token: jnp.ndarray,       # (B, 1) int32
+    pos: jnp.ndarray,         # () int32 current length
+    cache: dict,
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, dict]:
+    """One token for every family.  Returns (logits (B, vocab), cache)."""
+    x = embed_tokens(token, params["embed"])
+    x = lc(x, ("batch", None, None))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        dec = (B.dense_block_decode if cfg.family != "moe"
+               else B.moe_block_decode)
+
+        def body(carry, xs):
+            p, ck, cv = xs
+            out, ck, cv = dec(carry, p, cfg, ck, cv, pos)
+            return out, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            p, conv, ssm = xs
+            out, conv, ssm = B.mamba_block_decode(carry, p, cfg, conv, ssm)
+            return out, (conv, ssm)
+
+        x, (convs, ssms) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+        cache = {"conv": convs, "ssm": ssms}
+
+    elif cfg.family == "hybrid":
+        g, rem = _hybrid_groups(cfg)
+        shared = params["shared_attn"]
+        grouped = jax.tree.map(
+            lambda t: t[: g * cfg.attn_every].reshape(
+                (g, cfg.attn_every) + t.shape[1:]),
+            params["blocks"])
+        tail = jax.tree.map(lambda t: t[g * cfg.attn_every:], params["blocks"])
+        conv_g = jax.tree.map(
+            lambda t: t[: g * cfg.attn_every].reshape(
+                (g, cfg.attn_every) + t.shape[1:]), cache["conv"])
+        ssm_g = jax.tree.map(
+            lambda t: t[: g * cfg.attn_every].reshape(
+                (g, cfg.attn_every) + t.shape[1:]), cache["ssm"])
+        conv_t = cache["conv"][g * cfg.attn_every:]
+        ssm_t = cache["ssm"][g * cfg.attn_every:]
+
+        def mamba_body(carry, xs):
+            p, conv, ssm = xs
+            out, conv, ssm = B.mamba_block_decode(carry, p, cfg, conv, ssm)
+            return out, (conv, ssm)
+
+        def group_body(carry, xs):
+            p_group, ck, cv, conv, ssm = xs
+            h, ck, cv = B.dense_block_decode(carry, shared, cfg, ck, cv, pos)
+            h, (conv, ssm) = jax.lax.scan(mamba_body, h, (p_group, conv, ssm))
+            return h, (ck, cv, conv, ssm)
+
+        x, (ks, vs, convs, ssms) = jax.lax.scan(
+            group_body, x, (grouped, cache["k"], cache["v"], conv_g, ssm_g))
+        if rem:
+            x, (conv_t, ssm_t) = jax.lax.scan(
+                mamba_body, x, (tail, conv_t, ssm_t))
+        cache = {
+            "conv": jnp.concatenate(
+                [convs.reshape((-1,) + convs.shape[2:]), conv_t], axis=0),
+            "ssm": jnp.concatenate(
+                [ssms.reshape((-1,) + ssms.shape[2:]), ssm_t], axis=0),
+            "k": ks,
+            "v": vs,
+        }
+
+    elif cfg.family == "encdec":
+        from repro.models.layers import sinusoid_position_at
+
+        x = x + sinusoid_position_at(pos, cfg.d_model)[None, None, :].astype(x.dtype)
+
+        def body(carry, xs):
+            p, ck, cv, xk, xv = xs
+            out, ck, cv = B.decoder_block_decode(
+                carry, p, cfg, ck, cv, xk, xv, pos)
+            return out, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x,
+            (params["dec_blocks"], cache["k"], cache["v"],
+             cache["xk"], cache["xv"]))
+        cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits(params, cfg, x)[:, 0, :]
+    return logits, cache
+
+
+def prefill(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    max_seq: int,
+) -> tuple[jnp.ndarray, dict]:
+    """Full-sequence prefill building the decode cache.
+
+    Returns (last-token logits (B, vocab), cache).
+    """
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    dt = cfg.act_dtype()
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    x = embed_tokens(tokens, params["embed"])
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    s_total = x.shape[1]
+    positions = jnp.broadcast_to(
+        jnp.arange(s_total, dtype=jnp.int32)[None, :], (bsz, s_total))
+    x = lc(x, ("batch", None, None))
+
+    def pad_kv(k):
+        # (B, S, KV, dh) -> (B, max_seq, KV, dh)
+        return jnp.pad(k, ((0, 0), (0, max_seq - k.shape[1]), (0, 0), (0, 0)))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, p):
+            if cfg.family == "moe":
+                out, _ = B.moe_block_forward(carry, p, cfg, positions)
+                # recompute k/v for the cache (cheap projections)
+                h = rms_norm(carry, p["ln1"], cfg.norm_eps)
+                k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])
+                v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])
+                from repro.models.layers import apply_rope
+                k = apply_rope(k, positions, cfg.rope_theta)
+                return out, (pad_kv(k), pad_kv(v))
+            out, (k, v) = B.dense_block_forward(carry, p, cfg, positions)
+            return out, (pad_kv(k), pad_kv(v))
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        def body(carry, p):
+            out, state = B.mamba_block_forward(carry, p, cfg)
+            # conv window: last K-1 pre-conv (x | B C) inputs
+            h = rms_norm(carry, p["ln"], cfg.norm_eps)
+            tail = h[:, -(cfg.ssm_conv - 1):, :]
+            xbc = jnp.concatenate(
+                [jnp.dot(tail, p["w_x"]), jnp.dot(tail, p["w_bc"])], axis=-1)
+            return out, (xbc, state)
+
+        x, (convs, ssms) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"conv": convs, "ssm": ssms}
+
+    elif cfg.family == "hybrid":
+        g, rem = _hybrid_groups(cfg)
+        shared = params["shared_attn"]
+        grouped = jax.tree.map(
+            lambda t: t[: g * cfg.attn_every].reshape(
+                (g, cfg.attn_every) + t.shape[1:]),
+            params["blocks"])
+        tail = jax.tree.map(lambda t: t[g * cfg.attn_every:], params["blocks"])
+
+        def mamba_body(carry, p):
+            out, state = B.mamba_block_forward(carry, p, cfg)
+            h = rms_norm(carry, p["ln"], cfg.norm_eps)
+            tail = h[:, -(cfg.ssm_conv - 1):, :]
+            xbc = jnp.concatenate(
+                [jnp.dot(tail, p["w_x"]), jnp.dot(tail, p["w_bc"])], axis=-1)
+            return out, (xbc, state)
+
+        def group_body(carry, p_group):
+            h, (k, v) = B.dense_block_forward(carry, shared, cfg, positions)
+            h, (convs, ssms) = jax.lax.scan(mamba_body, h, p_group)
+            return h, (pad_kv(k), pad_kv(v), convs, ssms)
+
+        x, (ks, vs, convs, ssms) = jax.lax.scan(group_body, x, grouped)
+        convs = convs.reshape((-1,) + convs.shape[2:])
+        ssms = ssms.reshape((-1,) + ssms.shape[2:])
+        if rem:
+            x, (conv_t, ssm_t) = jax.lax.scan(mamba_body, x, tail)
+            convs = jnp.concatenate([convs, conv_t], axis=0)
+            ssms = jnp.concatenate([ssms, ssm_t], axis=0)
+        cache = {"conv": convs, "ssm": ssms, "k": ks, "v": vs}
+
+    elif cfg.family == "encdec":
+        frames = batch["frames"].astype(x.dtype)
+        enc_pos = sinusoid_positions(frames.shape[1], cfg.d_model)
+        h = frames + enc_pos[None].astype(x.dtype)
+        epos = jnp.broadcast_to(
+            jnp.arange(frames.shape[1], dtype=jnp.int32)[None, :],
+            (bsz, frames.shape[1]))
+
+        def enc_body(carry, p):
+            return B.encoder_block_forward(carry, p, cfg, epos), None
+
+        h, _ = jax.lax.scan(enc_body, h, params["enc_blocks"])
+        enc_out = rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+        x = x + sinusoid_positions(s, cfg.d_model)[None].astype(x.dtype)
+
+        def dec_body(carry, p):
+            out, (k, v) = B.decoder_block_forward(carry, p, cfg, positions, enc_out)
+            xk, xv = B.encdec_cross_kv(p["xattn"], cfg, enc_out)
+            return out, (pad_kv(k), pad_kv(v), xk, xv)
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(dec_body, x, params["dec_blocks"])
+        cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits(params, cfg, x[:, -1:, :])[:, 0, :]
+    return logits, cache
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    """Logical axes for the decode cache (same structure as
+    init_decode_cache)."""
+    attn = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"k": attn, "v": attn}
+    ssm = {
+        "conv": ("layers", "batch", None, None),
+        "ssm": ("layers", "batch", "ssm_heads", None, "state"),
+    }
+    if cfg.family == "ssm":
+        return ssm
+    if cfg.family == "hybrid":
+        return {**ssm, "k": attn, "v": attn}
+    if cfg.family == "encdec":
+        return {"k": attn, "v": attn, "xk": attn, "xv": attn}
+    raise ValueError(cfg.family)
+
+
+# ===========================================================================
+# accounting
+# ===========================================================================
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def count_active_params(params, cfg: ModelConfig) -> int:
+    """MoE: only top_k of n_experts contribute per token."""
+    total = count_params(params)
+    if cfg.family != "moe":
+        return total
+    expert = 0
+    for name in ("w_gate", "w_up", "w_down"):
+        leaf = params["blocks"]["moe"][name]
+        expert += int(leaf.size)
+    inactive = expert * (1.0 - cfg.top_k / cfg.n_experts)
+    return int(total - inactive)
+
+
+def count_flop_params(params, cfg: ModelConfig) -> int:
+    """Active params excluding the embedding table (standard MFU
+    convention: table lookups are gathers, not matmuls; the LM head
+    matmul IS counted)."""
+    n = count_active_params(params, cfg)
+    return n - int(params["embed"].size)
+
+
+def model_flops(params, cfg: ModelConfig, n_tokens: int, *, train: bool = True) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference),
+    N = active non-embedding params."""
+    n = count_flop_params(params, cfg)
+    return (6.0 if train else 2.0) * n * n_tokens

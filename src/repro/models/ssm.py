@@ -1,0 +1,241 @@
+"""Mamba2 / SSD (state-space duality) block, chunked scan.
+
+Follows the minimal SSD formulation (Dao & Gu, arXiv:2405.21060):
+
+    in-proj -> [z | x | B | C | dt],  causal conv1d over (x, B, C),
+    y = SSD(x, dt, A, B, C) + D*x,  y = RMSNorm(y * silu(z)),  out-proj
+
+The in-projection is stored as separate segment matrices (w_z, w_x,
+w_bc, w_dt) rather than one fused matrix so the TP split on the
+``inner`` axis never cuts across segment boundaries.
+
+The SSD core is chunked: within a chunk of Q tokens the recurrence is
+an attention-like lower-triangular matmul; across chunks a ``lax.scan``
+carries the (H, P, N) state.  Per-token work is O(Q + N P), i.e.
+sub-quadratic — this is the family that runs the ``long_500k`` shape.
+
+Decode is the O(1) recurrent update on the carried state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise segment sums.
+
+    x: (..., Q) per-step log-decay; returns (..., Q, Q) where
+    out[..., t, s] = sum_{s < r <= t} x[..., r]  (NEG_INF above diag).
+    """
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B, L, H, P)
+    dt: jnp.ndarray,     # (B, L, H)   (post-softplus)
+    a: jnp.ndarray,      # (H,)        (negative)
+    b_mat: jnp.ndarray,  # (B, L, G, N)
+    c_mat: jnp.ndarray,  # (B, L, G, N)
+    *,
+    chunk: int,
+    init_state: jnp.ndarray | None = None,   # (B, H, P, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = h // g
+
+    # fold dt into x (standard SSD trick): x_bar = x * dt
+    xb = x * dt[..., None].astype(x.dtype)
+    da = dt * a[None, None, :]                     # (B, L, H) log-decay
+
+    xc = xb.reshape(bsz, nc, chunk, h, p)
+    dac = da.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, g, n)
+    cc = c_mat.reshape(bsz, nc, chunk, g, n)
+
+    # --- intra-chunk (attention-like) ---
+    lmat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))        # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc,
+                        preferred_element_type=jnp.float32)   # (B,nc,G,Q,Q)
+    scores = scores.reshape(bsz, nc, g, 1, chunk, chunk)
+    lm = lmat.reshape(bsz, nc, g, rep, chunk, chunk)
+    att = (scores * lm).astype(x.dtype)                        # (B,nc,G,rep,Q,Q)
+    y_intra = jnp.einsum(
+        "bcgrqk,bckgrp->bcqgrp",
+        att,
+        xc.reshape(bsz, nc, chunk, g, rep, p),
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- chunk states ---
+    cum = jnp.cumsum(dac, axis=2)                              # (B,nc,Q,H)
+    total = cum[:, :, -1:, :]                                  # (B,nc,1,H)
+    decay_to_end = jnp.exp(total - cum)                        # (B,nc,Q,H)
+    s_chunk = jnp.einsum(
+        "bcqgn,bcqgrp,bcqgr->bcgrpn",
+        bc.astype(jnp.float32),
+        xc.reshape(bsz, nc, chunk, g, rep, p).astype(jnp.float32),
+        decay_to_end.reshape(bsz, nc, chunk, g, rep),
+        preferred_element_type=jnp.float32,
+    )                                                          # (B,nc,G,rep,P,N)
+
+    # --- inter-chunk scan ---
+    chunk_decay = jnp.exp(total[:, :, 0, :])                   # (B,nc,H)
+
+    def scan_fn(state, inp):
+        s_c, dec = inp                                         # (B,G,rep,P,N),(B,H)
+        prev = state
+        new = prev * dec.reshape(bsz, g, rep, 1, 1) + s_c
+        return new, prev
+
+    if init_state is None:
+        state0 = jnp.zeros((bsz, g, rep, p, n), dtype=jnp.float32)
+    else:
+        state0 = init_state.reshape(bsz, g, rep, p, n).astype(jnp.float32)
+
+    s_swapped = jnp.moveaxis(s_chunk, 1, 0)                    # (nc,B,...)
+    d_swapped = jnp.moveaxis(chunk_decay, 1, 0)                # (nc,B,H)
+    final_state, prev_states = jax.lax.scan(scan_fn, state0, (s_swapped, d_swapped))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (B,nc,G,rep,P,N)
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(cum)                                    # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcqgn,bcgrpn,bcqgr->bcqgrp",
+        cc.astype(jnp.float32),
+        prev_states,
+        in_decay.reshape(bsz, nc, chunk, g, rep),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p).astype(x.dtype)
+    return y, final_state.reshape(bsz, h, p, n)
+
+
+def _causal_conv(seg: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d, kernel size K, via shifted adds.
+
+    seg: (B, L, C); w: (K, C); bias: (C,).  SiLU applied.
+    """
+    k = w.shape[0]
+    out = jnp.zeros(seg.shape, dtype=jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        shifted = jnp.pad(seg, ((0, 0), (shift, 0), (0, 0)))[:, : seg.shape[1], :]
+        out = out + shifted.astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + bias.astype(jnp.float32)
+    return jax.nn.silu(out).astype(seg.dtype)
+
+
+def in_proj(x: jnp.ndarray, p: dict):
+    """Split in-projection: returns (z, x_seg, bc_seg, dt_raw)."""
+    z = jnp.dot(x, p["w_z"])
+    xs = jnp.dot(x, p["w_x"])
+    bc = jnp.dot(x, p["w_bc"])
+    dt = jnp.dot(x, p["w_dt"])
+    return z, xs, bc, dt
+
+
+def mamba2_forward(
+    x: jnp.ndarray,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    init_state: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence Mamba2 block.  x: (B, L, d_model).
+
+    Returns (out (B, L, d_model), final ssm state (B, H, P, N)).
+    """
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    bsz, l, _ = x.shape
+
+    z, xs, bc, dt = in_proj(x, p)
+    xs = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"])
+    bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+
+    xs = xs.reshape(bsz, l, h, pdim)
+    b_mat, c_mat = jnp.split(bc, 2, axis=-1)
+    b_mat = b_mat.reshape(bsz, l, g, n)
+    c_mat = c_mat.reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    y, state = ssd_chunked(
+        xs, dt, a, b_mat, c_mat, chunk=min(cfg.ssm_chunk, l), init_state=init_state
+    )
+    y = y + xs * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, l, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_scale"], cfg.norm_eps)
+    return jnp.dot(y, p["w_out"]), state
+
+
+def mamba2_decode(
+    x: jnp.ndarray,
+    p: dict,
+    cfg: ModelConfig,
+    conv_state: jnp.ndarray,     # (B, K-1, d_in + 2GN)  [x-seg | bc-seg]
+    ssm_state: jnp.ndarray,      # (B, H, P, N)
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent step.  x: (B, 1, d_model)."""
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+    bsz = x.shape[0]
+
+    z, xs_new, bc_new, dt = in_proj(x[:, 0, :], p)
+    xbc_new = jnp.concatenate([xs_new, bc_new], axis=-1)      # (B, d_in+2GN)
+
+    window = jnp.concatenate([conv_state, xbc_new[:, None, :]], axis=1)  # (B,K,C)
+    new_conv_state = window[:, 1:, :]
+    w_full = jnp.concatenate([p["conv_x_w"], p["conv_bc_w"]], axis=1)    # (K, C)
+    b_full = jnp.concatenate([p["conv_x_b"], p["conv_bc_b"]], axis=0)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          w_full.astype(jnp.float32)) + b_full.astype(jnp.float32)
+    xbc_c = jax.nn.silu(conv_out).astype(x.dtype)
+
+    xs, bc = jnp.split(xbc_c, [d_in], axis=-1)
+    b_mat, c_mat = jnp.split(bc, 2, axis=-1)
+    xs = xs.reshape(bsz, h, pdim)
+    b_mat = b_mat.reshape(bsz, g, n)
+    c_mat = c_mat.reshape(bsz, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    rep = h // g
+    decay = jnp.exp(dt * a[None, :])                                  # (B,H)
+    xs_g = xs.reshape(bsz, g, rep, pdim)
+    dt_g = dt.reshape(bsz, g, rep)
+    bx = jnp.einsum(
+        "bgn,bgrp,bgr->bgrpn", b_mat.astype(jnp.float32),
+        xs_g.astype(jnp.float32), dt_g,
+        preferred_element_type=jnp.float32,
+    ).reshape(bsz, h, pdim, n)
+    state = ssm_state.astype(jnp.float32) * decay[..., None, None] + bx
+    y = jnp.einsum(
+        "bgn,bgrpn->bgrp",
+        c_mat.astype(jnp.float32),
+        state.reshape(bsz, g, rep, pdim, n),
+        preferred_element_type=jnp.float32,
+    ).reshape(bsz, h, pdim)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_scale"], cfg.norm_eps)
+    out = jnp.dot(y, p["w_out"])[:, None, :]
+    return out, new_conv_state, state.astype(ssm_state.dtype)

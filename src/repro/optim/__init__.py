@@ -1,0 +1,7 @@
+"""Optimizers: AdamW (baseline) and AnalogNewton — the paper's RNM
+solver integrated as the SPD-solve backend of a layerwise second-order
+preconditioner."""
+
+from repro.optim.adamw import adamw
+from repro.optim.analog_newton import analog_newton
+from repro.optim.schedule import cosine_schedule

@@ -1,0 +1,65 @@
+"""AdamW, hand-rolled (optax-style (init, update) pair, pure pytrees).
+
+Optimizer state lives in float32 regardless of parameter dtype (mixed
+precision: bf16 params, f32 moments) and inherits the parameters'
+sharding (FSDP: moments shard with their parameter).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable       # (grads, state, params) -> (updates, state)
+
+
+def adamw(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {
+            "mu": zeros,
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        # global-norm clip (f32)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        g32 = jax.tree.map(lambda g: g * scale, g32)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr(step) if callable(lr) else lr
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,208 @@
+"""AnalogNewton — the paper's RNM solver as an optimizer substrate.
+
+Layerwise block-Jacobi natural-gradient preconditioning:
+
+* Inside jit (every step): for each 2D parameter, maintain an EMA of the
+  per-block input-side gradient covariance ``C = E[G_b G_b^T]``
+  (blocks of size ``block`` along the input dim — the *fixed crossbar
+  array size* of a deployed analog accelerator), and precondition the
+  gradient with the current block inverses: ``P_b @ G_b`` — on real
+  hardware this MVM is the crossbar's free operation (Sec. IV-A4).
+
+* Outside jit (every ``refresh_every`` steps, host callback):
+  ``refresh_preconditioner`` re-solves ``(C_b + lambda I) X = e_i``
+  column by column **through the simulated RNM circuit** (2n transform
+  -> netlist -> non-ideal operating point), i.e. each refresh is
+  ``n_blocks * block`` analog solves with the configured op-amp/pot
+  error model.  Backends: "analog_2n" (paper), "analog_n"
+  (preliminary), "cholesky"/"cg" (digital baselines) — flipping the
+  backend gives the paper-vs-digital comparison inside a real training
+  run (see examples/train_lm.py).
+
+SPD guarantee: C is PSD by construction; +lambda I makes it SPD — the
+transform's stable domain (Sec. IV-A1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import Optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogNewtonConfig:
+    block: int = 64              # crossbar array size (n unknowns per solve)
+    ema: float = 0.95
+    damping: float = 1e-4        # lambda (relative to mean diag)
+    min_dim: int = 64            # 2D params smaller than this use plain Adam
+    max_blocks: int = 16         # skip leaves needing more block solves
+                                 # than this per refresh (host-sim budget;
+                                 # real hardware solves are O(1) each)
+    refresh_every: int = 20
+    backend: str = "analog_2n"   # analog_2n | analog_n | cholesky | cg
+    opamp: str = "AD712"
+    nonideal: Any = None         # repro.core.operating_point.NonIdealities
+
+
+def _n_blocks(m: int, block: int) -> int:
+    return (m + block - 1) // block
+
+
+def _is_precond(path_leaf, cfg: AnalogNewtonConfig) -> bool:
+    if path_leaf.ndim != 2 or min(path_leaf.shape) < cfg.min_dim:
+        return False
+    return _n_blocks(path_leaf.shape[0], cfg.block) <= cfg.max_blocks
+
+
+def analog_newton(
+    lr,
+    cfg: AnalogNewtonConfig = AnalogNewtonConfig(),
+    *,
+    b1: float = 0.9,
+    weight_decay: float = 0.0,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        def cov_init(p):
+            if not _is_precond(p, cfg):
+                return None
+            nb = _n_blocks(p.shape[0], cfg.block)
+            return jnp.zeros((nb, cfg.block, cfg.block), jnp.float32)
+
+        def pinv_init(p):
+            if not _is_precond(p, cfg):
+                return None
+            nb = _n_blocks(p.shape[0], cfg.block)
+            eye = jnp.eye(cfg.block, dtype=jnp.float32)
+            return jnp.broadcast_to(eye, (nb, cfg.block, cfg.block)).copy()
+
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "cov": jax.tree.map(cov_init, params),
+            "pinv": jax.tree.map(pinv_init, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _blocked(g32: jnp.ndarray) -> jnp.ndarray:
+        m, n = g32.shape
+        nb = _n_blocks(m, cfg.block)
+        pad = nb * cfg.block - m
+        gb = jnp.pad(g32, ((0, pad), (0, 0)))
+        return gb.reshape(nb, cfg.block, n)
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        g32 = jax.tree.map(lambda g: g * scale, g32)
+
+        def upd_cov(c, g, p):
+            if c is None:
+                return None
+            gb = _blocked(g)                                 # (nb, r, n)
+            cb = jnp.einsum("brn,bsn->brs", gb, gb) / g.shape[1]
+            return cfg.ema * c + (1 - cfg.ema) * cb
+
+        cov = jax.tree.map(
+            upd_cov, state["cov"], g32, params,
+            is_leaf=lambda v: v is None)
+
+        def precondition(g, pinv, p):
+            if pinv is None:
+                return g
+            gb = _blocked(g)                                 # (nb, r, n)
+            pg = jnp.einsum("brs,bsn->brn", pinv, gb)
+            return pg.reshape(-1, g.shape[1])[: g.shape[0]]
+
+        pg = jax.tree.map(
+            precondition, g32, state["pinv"], params,
+            is_leaf=lambda v: v is None)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], pg)
+        lr_t = lr(step) if callable(lr) else lr
+
+        def norm_update(m, g, p):
+            # LAMB-style trust ratio: the preconditioner sets the
+            # direction; the step scales with the parameter's own norm
+            # so small-norm tensors (norm scales, biases) don't overshoot
+            mn = jnp.sqrt(jnp.mean(m * m)) + 1e-12
+            wn = jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32))))
+            trust = jnp.clip(wn, 1e-2, 10.0)
+            u = (m / mn) * trust + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(norm_update, mu, pg, params)
+        return updates, {"mu": mu, "cov": cov, "pinv": state["pinv"], "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# host-side preconditioner refresh through the simulated analog circuit
+# ---------------------------------------------------------------------------
+
+def _solve_spd(a: np.ndarray, b: np.ndarray, cfg: AnalogNewtonConfig) -> np.ndarray:
+    from repro.core.solver import solve
+
+    res = solve(
+        a, b,
+        method=cfg.backend if cfg.backend.startswith("analog") else cfg.backend,
+        opamp=cfg.opamp,
+        nonideal=cfg.nonideal,
+    )
+    return np.asarray(res.x)
+
+
+def refresh_preconditioner(state: dict, cfg: AnalogNewtonConfig) -> dict:
+    """Host callback: rebuild every block inverse through the solver.
+
+    Each block inverse column is one RNM circuit solve (unit-vector
+    RHS), i.e. the analog accelerator's workload.  Conductance scaling:
+    the covariance is normalized to the paper's uS range before mapping
+    (Eq. 27 — solutions are scale-invariant).
+    """
+    new_pinv = {}
+
+    cov_leaves = jax.tree.leaves_with_path(
+        state["cov"], is_leaf=lambda v: v is None)
+    pinv_tree = state["pinv"]
+
+    def refresh_leaf(c):
+        if c is None:
+            return None
+        c_np = np.asarray(c, dtype=np.float64)
+        nb, r, _ = c_np.shape
+        out = np.zeros_like(c_np)
+        for bidx in range(nb):
+            cb = c_np[bidx]
+            # damping floor keeps zero-covariance blocks (cold start,
+            # padded tails) well-conditioned: pinv ~ I/damp there
+            damp = cfg.damping * max(np.trace(cb) / r, 1e-12)
+            a = cb + damp * np.eye(r)
+            if cfg.backend in ("cholesky",):
+                out[bidx] = np.linalg.inv(a)
+                continue
+            # map into the paper's ranges: conductances ~ 500 uS peak,
+            # currents sized so node voltages land in ~[-0.5, 0.5] V
+            s = 500e-6 / max(np.abs(a).max(), 1e-300)
+            a_s = a * s
+            beta = 0.25 * 500e-6           # ~0.25 V solution scale
+            cols = np.zeros((r, r))
+            for j in range(r):
+                e = np.zeros(r)
+                e[j] = beta
+                y = _solve_spd(a_s, e, cfg)     # y = (sA)^-1 beta e_j
+                cols[:, j] = y * s / beta       # = A^-1 e_j
+            out[bidx] = cols
+        return jnp.asarray(out, jnp.float32)
+
+    new_pinv = jax.tree.map(
+        refresh_leaf, state["cov"], is_leaf=lambda v: v is None)
+    return {**state, "pinv": new_pinv}

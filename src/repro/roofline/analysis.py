@@ -1,0 +1,135 @@
+"""Three-term roofline from the compiled dry-run.
+
+    compute    = HLO_FLOPs      / (chips * peak_FLOP/s)
+    memory     = HLO_bytes      / (chips * HBM_bw)
+    collective = collective_B   / (chips * link_bw)
+
+``cost_analysis`` supplies FLOPs and bytes accessed; collective bytes
+are *not* in cost_analysis, so we parse the optimized HLO text and sum
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12       # bf16 per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    link_bw: float = 50e9            # bytes/s per ICI link
+
+
+HW = HardwareSpec()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# matches e.g.  bf16[2,4096,128]{2,1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape literal like ``bf16[8,128]``."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in the HLO.
+
+    Uses the *result* shape of each collective instruction (tuple
+    results are summed member-wise), which equals the moved payload for
+    AG/AR/RS/A2A up to the standard algorithm factors.
+    """
+    totals: dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # "  name = bf16[..] all-reduce(...)" or "  name = (f32[..], ..) all-to-all(..)"
+        m = re.match(r"^[%\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        shapes_str, op = m.groups()
+        base = None
+        for c in _COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-"):
+                base = c
+                break
+        if base is None:
+            continue
+        if shapes_str.startswith("("):
+            inner = shapes_str.strip("()")
+            parts = re.findall(r"\w+\[[\d,]*\](?:\{[\d,]*\})?", inner)
+            b = sum(_shape_bytes(p) for p in parts)
+        else:
+            b = _shape_bytes(shapes_str)
+        totals[base] += b
+    totals["total"] = sum(totals[k] for k in _COLLECTIVE_OPS)
+    return totals
+
+
+def roofline_report(
+    *,
+    flops: float,
+    bytes_accessed: float,
+    collective_bytes: float,
+    n_chips: int,
+    model_flops: float,
+    hw: HardwareSpec = HW,
+) -> dict:
+    """Per-step roofline terms in seconds + dominant-term verdict.
+
+    ``cost_analysis`` runs on the post-SPMD per-device module, so FLOPs
+    and bytes are PER CHIP (verified against a hand-sharded matmul);
+    collective bytes from the HLO are per-chip as well.  ``model_flops``
+    is whole-job (6*N*D), so its per-chip share is model_flops/n_chips.
+    """
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_accessed / hw.hbm_bw
+    collective_s = collective_bytes / hw.link_bw
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf_chip = model_flops / n_chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "step_time_lower_bound_s": bound,
+        "model_flops": model_flops,
+        "hlo_flops_per_chip": flops,
+        "useful_flops_ratio": (mf_chip / flops) if flops else 0.0,
+        "mfu_upper_bound": (mf_chip / hw.peak_flops / bound) if bound else 0.0,
+        "n_chips": n_chips,
+        "hw": hw.name,
+    }

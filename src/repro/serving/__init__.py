@@ -1,0 +1,3 @@
+"""Serving substrate: batched prefill/decode engine with KV/SSM caches."""
+
+from repro.serving.engine import ServeEngine

@@ -1,0 +1,4 @@
+"""Training substrate: loss, train step, state, metrics."""
+
+from repro.training.loss import cross_entropy_loss
+from repro.training.step import init_train_state, make_train_step

@@ -1,0 +1,37 @@
+"""Next-token cross-entropy with padded-vocab masking and ignore ids."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+IGNORE_ID = -1
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,       # (B, S, vocab_padded)
+    targets: jnp.ndarray,      # (B, S) int32, IGNORE_ID to mask
+    vocab: int,
+    *,
+    z_loss: float = 1e-4,
+) -> tuple[jnp.ndarray, dict]:
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > vocab:
+        # padded vocab rows never receive probability mass
+        pad_mask = jnp.arange(vp) >= vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+
+    lse = jax.nn.logsumexp(logits, axis=-1)                    # (B, S)
+    tgt = jnp.clip(targets, 0, vocab - 1)
+    true_logit = jnp.take_along_axis(
+        logits, tgt[..., None], axis=-1)[..., 0]
+    nll = lse - true_logit
+
+    mask = (targets != IGNORE_ID).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    zl = z_loss * ((lse * mask) ** 2).sum() / denom            # logit drift reg
+    acc = ((jnp.argmax(logits, -1) == tgt) * mask).sum() / denom
+    return ce + zl, {"ce": ce, "z_loss": zl, "accuracy": acc, "tokens": denom}

@@ -1,0 +1,69 @@
+"""Train step factory: loss + grad + optimizer + (optional) gradient
+compression, under whatever mesh/sharding rules are active.
+
+The step is family-agnostic — ``forward_train`` dispatches — and pure:
+``state`` is a dict pytree {params, opt_state, step}, so checkpointing
+and elastic re-sharding treat it uniformly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import forward_train, init_params
+from repro.optim.adamw import Optimizer, apply_updates
+from repro.training.loss import cross_entropy_loss
+
+
+def init_train_state(cfg: ModelConfig, optimizer: Optimizer, key) -> dict:
+    params = init_params(cfg, key)
+    return {
+        "params": params,
+        "opt_state": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    *,
+    aux_weight: float = 0.01,
+    compressor: Optional[Callable] = None,
+):
+    """compressor: optional (grads, error_state) -> (grads, error_state)
+    int8 error-feedback transform (see distributed.compression)."""
+
+    def loss_fn(params, batch):
+        logits, aux = forward_train(params, batch, cfg)
+        ce, metrics = cross_entropy_loss(logits, batch["targets"], cfg.vocab)
+        loss = ce + aux_weight * aux
+        metrics["aux"] = aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"], batch)
+
+        if compressor is not None:
+            grads, err = compressor(grads, state["opt_state"].get("comp_err"))
+        updates, opt_state = optimizer.update(
+            grads, state["opt_state"], state["params"])
+        if compressor is not None:
+            opt_state = {**opt_state, "comp_err": err}
+        params = apply_updates(state["params"], updates)
+
+        new_state = {
+            "params": params,
+            "opt_state": opt_state,
+            "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    return train_step

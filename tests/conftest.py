@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see ONE device; multi-device tests run in subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def small_spd(seed=0, n=10):
+    from repro.data.spd import random_spd, random_rhs_from_solution
+
+    r = np.random.default_rng(seed)
+    a = random_spd(r, n)
+    x, b = random_rhs_from_solution(r, a)
+    return a, x, b

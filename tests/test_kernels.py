@@ -1,0 +1,173 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret mode executes the Pallas kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import crosspoint_mvm, spd_transform_arrays, transient_step
+
+
+SHAPES_MVM = [
+    (16, 16, 1), (100, 100, 1), (128, 128, 128), (257, 130, 5), (300, 513, 64),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,k,b", SHAPES_MVM)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_crosspoint_mvm_sweep(m, k, b, dt):
+    rng = np.random.default_rng(m * 7 + k)
+    g = jnp.asarray(rng.standard_normal((m, k)), dt)
+    v = jnp.asarray(rng.standard_normal((k, b)), dt)
+    out = crosspoint_mvm(g, v, interpret=True)
+    want = ref.crosspoint_mvm_ref(g, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dt))
+
+
+def test_crosspoint_mvm_vector_input():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((50, 50)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(50), jnp.float32)
+    out = crosspoint_mvm(g, v, interpret=True)
+    assert out.shape == (50,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g) @ np.asarray(v),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,b", [(64, 1), (200, 3), (256, 128), (130, 17)])
+@pytest.mark.parametrize("dt", DTYPES)
+def test_transient_step_sweep(n, b, dt):
+    rng = np.random.default_rng(n + b)
+    m = jnp.asarray(rng.standard_normal((n, n)) * 0.1, dt)
+    z = jnp.asarray(rng.standard_normal((n, b)), dt)
+    c = jnp.asarray(rng.standard_normal((n, b)), dt)
+    out = transient_step(m, z, c, 1e-2, interpret=True)
+    want = ref.transient_step_ref(m, z, c, 1e-2)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dt))
+
+
+def test_transient_step_iterates_to_fixed_point():
+    """Scanning the kernel step converges to the linear solve (the
+    'physics does the iteration' path)."""
+    rng = np.random.default_rng(3)
+    n = 32
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lam = rng.uniform(0.5, 2.0, n)
+    a = (q * lam) @ q.T
+    x_true = rng.standard_normal(n)
+    b = a @ x_true
+    m = jnp.asarray(-a, jnp.float32)
+    c = jnp.asarray(b, jnp.float32)[:, None]
+    z = jnp.zeros((n, 1), jnp.float32)
+    dt = 0.5 / lam.max()
+    for _ in range(400):
+        z = transient_step(m, z, c, dt, interpret=True)
+    np.testing.assert_allclose(np.asarray(z[:, 0]), x_true, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [16, 100, 128, 200])
+@pytest.mark.parametrize("dt", [jnp.float32])
+def test_spd_transform_sweep(n, dt):
+    from repro.core.transform import transform_2n
+    from repro.data.spd import random_spd, random_rhs_from_solution
+
+    rng = np.random.default_rng(n)
+    a = random_spd(rng, n)
+    x, b = random_rhs_from_solution(rng, a)
+    ka, kb, d, ks = spd_transform_arrays(
+        jnp.asarray(a, dt), jnp.asarray(b, dt), interpret=True)
+    tr = transform_2n(a, b)
+    scale = float(np.abs(np.asarray(tr.k_a)).max())
+    np.testing.assert_allclose(np.asarray(ka), np.asarray(tr.k_a, np.float32),
+                               atol=1e-5 * scale)
+    np.testing.assert_allclose(np.asarray(kb), np.asarray(tr.k_b, np.float32),
+                               atol=1e-5 * scale)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(tr.d, np.float32),
+                               atol=1e-5 * scale)
+
+
+def test_spd_transform_solution_roundtrip():
+    """Kernel-produced K_A/K_B solve back to x (end-to-end fusion check)."""
+    from repro.data.spd import random_spd, random_rhs_from_solution
+
+    rng = np.random.default_rng(9)
+    n = 60
+    a = random_spd(rng, n) * 1e6   # scale to O(1) for f32 conditioning
+    x, b = random_rhs_from_solution(rng, a)
+    ka, kb, d, ks = spd_transform_arrays(
+        jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32), interpret=True)
+    m = np.block([[np.asarray(ka) + np.diag(np.asarray(ks)), np.asarray(kb)],
+                  [np.asarray(kb), np.asarray(ka) + np.diag(np.asarray(ks))]])
+    rhs = np.concatenate([b, -b])
+    y = np.linalg.solve(m.astype(np.float64), rhs)
+    np.testing.assert_allclose(y[:n], x, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas flash attention (the §Perf roofline-driven kernel)
+# ---------------------------------------------------------------------------
+
+def _naive_attn(q, k, v, causal, window=0):
+    b, s, h, d = q.shape
+    _, t, kv, _ = k.shape
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    sc = np.einsum("bqhgd,bkhd->bhgqk", qg, k) / np.sqrt(d)
+    mask = np.ones((s, t), bool)
+    if causal:
+        mask &= np.arange(t)[None, :] <= np.arange(s)[:, None]
+    if window:
+        mask &= np.arange(t)[None, :] > np.arange(s)[:, None] - window
+    sc = np.where(mask[None, None, None], sc, -1e30)
+    p = np.exp(sc - sc.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(b, s, h, d)
+
+
+@pytest.mark.parametrize("s,h,kv,d,causal,window", [
+    (128, 4, 2, 32, True, 0),
+    (128, 4, 4, 32, False, 0),
+    (192, 8, 2, 16, True, 64),
+    (100, 4, 1, 32, True, 0),       # ragged
+])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_pallas_sweep(s, h, kv, d, causal, window, dt):
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    rng = np.random.default_rng(s + h)
+    q = rng.standard_normal((2, s, h, d)).astype(np.float32)
+    k = rng.standard_normal((2, s, kv, d)).astype(np.float32)
+    v = rng.standard_normal((2, s, kv, d)).astype(np.float32)
+    out = flash_attention_pallas(
+        jnp.asarray(q, dt), jnp.asarray(k, dt), jnp.asarray(v, dt),
+        causal=causal, window=window, q_block=64, kv_block=64,
+        interpret=True)
+    want = _naive_attn(q, k, v, causal, window)
+    tol = 3e-2 if dt == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), want, rtol=tol, atol=tol)
+
+
+def test_flash_attention_pallas_matches_jnp_flash():
+    """Kernel vs the framework's pure-JAX flash (the production pair)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.attention import flash_attention
+
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.standard_normal((2, 96, 6, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 96, 3, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 96, 3, 32)), jnp.float32)
+    a = flash_attention_pallas(q, k, v, causal=True, q_block=32,
+                               kv_block=32, interpret=True)
+    b = flash_attention(q, k, v, causal=True, q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward + one train step on CPU, asserting shapes and no NaNs — plus
+the prefill/decode == full-forward consistency contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import (
+    count_params,
+    decode_step,
+    forward_train,
+    init_params,
+    prefill,
+)
+from repro.optim.adamw import adamw
+from repro.training.step import init_train_state, make_train_step
+
+
+def _batch(cfg, bsz=2, s=32, seed=1):
+    toks = jax.random.randint(
+        jax.random.PRNGKey(seed), (bsz, s), 0, cfg.vocab).astype(jnp.int32)
+    batch = {"tokens": toks, "targets": toks}
+    if cfg.family == "vlm":
+        batch["patches"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (bsz, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (bsz, cfg.enc_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = forward_train(params, batch, cfg)
+    assert logits.shape == (2, 32, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_runs(arch):
+    cfg = get_smoke_config(arch)
+    opt = adamw(1e-3)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = _batch(cfg)
+    state, metrics = step(state, batch)
+    assert int(state["step"]) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    for leaf in jax.tree.leaves(state["params"]):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode(prefix cache) must equal the full forward — exact serving
+    contract (MoE with no-drop capacity)."""
+    import repro.models.moe as moe_mod
+
+    orig = moe_mod.moe_capacity
+    moe_mod.moe_capacity = lambda n, e, k, factor=1.25: orig(n, e, k, 8.0)
+    try:
+        cfg = get_smoke_config(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        bsz, s = 2, 32
+        batch = _batch(cfg, bsz, s)
+        toks = batch["tokens"]
+        pos_off = cfg.n_patches if cfg.family == "vlm" else 0
+        logits_full, _ = forward_train(params, batch, cfg)
+
+        batch_pre = dict(batch)
+        batch_pre["tokens"] = toks[:, :-1]
+        lg_pre, cache = prefill(params, batch_pre, cfg, max_seq=pos_off + s + 8)
+        np.testing.assert_allclose(
+            np.asarray(lg_pre), np.asarray(logits_full[:, -2, :]),
+            rtol=1e-4, atol=1e-4)
+
+        lg_dec, _ = decode_step(
+            params, toks[:, -1:], jnp.asarray(pos_off + s - 1, jnp.int32),
+            cache, cfg)
+        np.testing.assert_allclose(
+            np.asarray(lg_dec), np.asarray(logits_full[:, -1, :]),
+            rtol=1e-4, atol=1e-4)
+    finally:
+        moe_mod.moe_capacity = orig
+
+
+def test_full_configs_match_assignment():
+    """Exact literature shapes (the dry-run exercises them abstractly)."""
+    spec = {
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "granite_moe_1b_a400m": (24, 1024, 16, 8, 512, 49155),
+        "internvl2_1b": (24, 896, 14, 2, 4864, 151655),
+        "granite_20b": (52, 6144, 48, 1, 24576, 49152),
+        "command_r_35b": (40, 8192, 64, 8, 22528, 256000),
+        "yi_34b": (60, 7168, 56, 8, 20480, 64000),
+        "qwen3_8b": (36, 4096, 32, 8, 12288, 151936),
+        "mamba2_370m": (48, 1024, 0, 0, 0, 50280),
+        "whisper_base": (6, 512, 8, 8, 2048, 51865),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+    }
+    for arch, (nl, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab)
+        assert got == (nl, d, h, kv, ff, v), (arch, got)
+    assert get_config("mixtral_8x22b").n_experts == 8
+    assert get_config("mixtral_8x22b").top_k == 2
+    assert get_config("granite_moe_1b_a400m").n_experts == 32
+    assert get_config("granite_moe_1b_a400m").top_k == 8
+    assert get_config("mamba2_370m").ssm_state == 128
+    assert get_config("zamba2_7b").ssm_state == 64
+    assert get_config("qwen3_8b").qk_norm
+
+
+def test_param_count_scale():
+    """Full-config param counts land near the published sizes."""
+    import math
+
+    expect = {
+        "qwen3_8b": 8.2e9,
+        "yi_34b": 34e9,
+        "mixtral_8x22b": 140e9,
+        "mamba2_370m": 0.37e9,
+    }
+    for arch, want in expect.items():
+        cfg = get_config(arch)
+        params = jax.eval_shape(
+            lambda cfg=cfg: init_params(cfg, jax.random.PRNGKey(0)))
+        n = count_params(params)
+        assert 0.7 * want < n < 1.45 * want, (arch, n, want)

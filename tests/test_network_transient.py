@@ -1,0 +1,163 @@
+"""Netlist construction + transient engine behaviour."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.network import build_preliminary, build_proposed
+from repro.core.operating_point import IDEAL, NonIdealities, operating_point
+from repro.core.specs import AD712, LTC2050, LTC6268
+from repro.core.transient import assemble_state_space, lti_transient
+from repro.core.transient_nl import nonlinear_transient
+from repro.data.spd import random_sdd, random_spd, random_rhs_from_solution
+
+
+def _sys(seed, n, density=1.0):
+    r = np.random.default_rng(seed)
+    a = random_spd(r, n, density=density)
+    x, b = random_rhs_from_solution(r, a)
+    return a, x, b
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 5000), n=st.integers(2, 14))
+def test_netlist_dc_roundtrip_proposed(seed, n):
+    """Reassembling the physical components reproduces the DC operator."""
+    a, x, b = _sys(seed, n)
+    from repro.core.transform import transform_2n
+
+    net = build_proposed(a, b)
+    m_dc = net.assemble_dc()
+    m_want = np.asarray(transform_2n(a, b).assembled())
+    np.testing.assert_allclose(m_dc, m_want, rtol=1e-10, atol=1e-22)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 5000), n=st.integers(2, 12))
+def test_netlist_dc_roundtrip_preliminary(seed, n):
+    a, x, b = _sys(seed, n)
+    net = build_preliminary(a, b)
+    np.testing.assert_allclose(net.assemble_dc(), a, rtol=1e-10, atol=1e-22)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 5000), n=st.integers(2, 10))
+def test_proposed_max_n_cells(seed, n):
+    """At most n negative-resistance cells (vs up to (n^2-n)/2 + n)."""
+    a, x, b = _sys(seed, n)
+    assert len(build_proposed(a, b).cells) <= n
+
+
+def test_sdd_is_passive():
+    r = np.random.default_rng(2)
+    a = random_sdd(r, 15)
+    x, b = random_rhs_from_solution(r, a)
+    net = build_proposed(a, b)
+    assert net.is_passive and net.design == "passive"
+
+
+def test_ideal_operating_point_exact():
+    a, x, b = _sys(11, 12)
+    for build in (build_proposed, build_preliminary):
+        net = build(a, b)
+        op = operating_point(net, x_ref=x, nonideal=IDEAL)
+        assert op.max_abs_error < 1e-9
+        assert not op.amp_saturated
+
+
+def test_settling_positive_and_finite():
+    a, x, b = _sys(5, 10)
+    res = lti_transient(build_proposed(a, b))
+    assert res.stable
+    assert 0 < res.settle_time < 1.0
+    assert res.mirror_residual < 1e-8
+    # finite open-loop gain (A0=2e5) leaves ~1e-4 V steady error
+    np.testing.assert_allclose(res.x_converged, x, atol=1e-3)
+
+
+def test_negative_definite_unstable():
+    """Fig. 8: flipping the sign of (A, b) must destabilize the circuit."""
+    a, x, b = _sys(7, 6)
+    res = lti_transient(build_proposed(-a, -b))
+    assert not res.stable
+    assert res.settle_time == float("inf")
+
+
+def test_nonlinear_saturation_on_negative_definite():
+    a, x, b = _sys(7, 5)
+    tr = nonlinear_transient(build_proposed(-a, -b), t_end=5e-5)
+    assert tr.saturated
+
+
+def test_nonlinear_agrees_with_op_on_pd():
+    a, x, b = _sys(9, 5)
+    net = build_proposed(a, b)
+    tr = nonlinear_transient(net, t_end=4e-4)
+    assert not tr.saturated
+    np.testing.assert_allclose(tr.x_final, x, atol=2e-3)
+
+
+def test_sdd_settles_much_faster_than_non_dd():
+    r = np.random.default_rng(3)
+    a_dd = random_sdd(r, 12)
+    x1, b1 = random_rhs_from_solution(r, a_dd)
+    t_dd = lti_transient(build_proposed(a_dd, b1)).settle_time
+
+    a, x, b = _sys(3, 12)
+    t_non = lti_transient(build_proposed(a, b)).settle_time
+    assert t_dd < t_non / 5, (t_dd, t_non)
+
+
+def test_preliminary_slower_than_proposed():
+    """Component-count reduction -> lower parasitic load -> faster."""
+    ratios = []
+    for seed in range(4):
+        a, x, b = _sys(seed + 100, 16)
+        t_pro = lti_transient(build_proposed(a, b)).settle_time
+        t_pre = lti_transient(build_preliminary(a, b)).settle_time
+        ratios.append(t_pre / t_pro)
+    assert np.median(ratios) > 1.5, ratios
+
+
+def test_faster_opamp_settles_faster():
+    """Fig. 15 trend: LTC6268 (500 MHz GBW, 0.5 pF) beats AD712."""
+    a, x, b = _sys(21, 12)
+    net = build_proposed(a, b)
+    t_ad = lti_transient(net, AD712).settle_time
+    t_ltc = lti_transient(net, LTC6268).settle_time
+    assert t_ltc < t_ad
+
+
+def test_offset_drives_error():
+    """Fig. 15 trend: LTC2050 (3 uV offset, 1e8 gain) is far more
+    accurate than AD712 (1 mV, 2e5)."""
+    a, x, b = _sys(23, 12)
+    net = build_proposed(a, b)
+    ni = NonIdealities(offset_mode="random", seed=1)
+    e_ad = operating_point(net, AD712, nonideal=ni, x_ref=x).err_fullscale
+    e_ltc = operating_point(net, LTC2050, nonideal=ni, x_ref=x).err_fullscale
+    assert e_ltc < e_ad / 10
+
+
+def test_quantization_and_wiper_increase_error():
+    a, x, b = _sys(25, 10)
+    net = build_proposed(a, b)
+    base = operating_point(net, x_ref=x, nonideal=IDEAL).err_fullscale
+    coarse = operating_point(
+        net, x_ref=x,
+        nonideal=NonIdealities(pot_bits=6, offset_mode="none",
+                               use_finite_gain=False)).err_fullscale
+    wiper = operating_point(
+        net, x_ref=x,
+        nonideal=NonIdealities(wiper_ohm=200.0, offset_mode="none",
+                               use_finite_gain=False)).err_fullscale
+    assert coarse > base and wiper > base
+
+
+def test_state_space_amp_bookkeeping():
+    a, x, b = _sys(31, 8)
+    net = build_proposed(a, b)
+    ss = assemble_state_space(net)
+    assert ss.n_states > net.n_nodes
+    assert len(ss.amp_out_index) == net.n_amps
+    assert len(ss.amp_int_index) == net.n_amps

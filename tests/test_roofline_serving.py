@@ -1,0 +1,114 @@
+"""Roofline HLO parser correctness + serving engine behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (
+    HW,
+    collective_bytes_from_hlo,
+    roofline_report,
+)
+from repro.roofline.hlo_parse import loop_aware_costs
+
+
+def test_parser_scan_trip_multiplication():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((7, 128, 128), jnp.float32)).compile()
+    got = loop_aware_costs(c.as_text())
+    assert got["flops"] == pytest.approx(2 * 128 ** 3 * 7, rel=0.01)
+
+
+def test_parser_nested_scan():
+    def f(x, w):
+        def outer(c, wg):
+            def inner(ci, wi):
+                return ci @ wi, None
+            return jax.lax.scan(inner, c, wg)[0], None
+        return jax.lax.scan(outer, x, w)[0]
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((3, 5, 64, 64), jnp.float32)).compile()
+    got = loop_aware_costs(c.as_text())
+    assert got["flops"] == pytest.approx(2 * 64 ** 3 * 15, rel=0.01)
+
+
+def test_parser_dus_counts_region_only():
+    def step(cache, tok):
+        return jax.lax.dynamic_update_slice(cache, tok, (0, 0, 0))
+
+    c = jax.jit(step).lower(
+        jax.ShapeDtypeStruct((64, 1024, 128), jnp.bfloat16),
+        jax.ShapeDtypeStruct((64, 1, 128), jnp.bfloat16)).compile()
+    got = loop_aware_costs(c.as_text())
+    # in-place model: the DUS itself contributes only the update region;
+    # the remaining traffic is the (donation-removable) entry/exit copy
+    # of the buffer — well below the naive 2x read+write of the buffer
+    # per update (~67 MB)
+    assert got["bytes"] < 36e6
+
+
+def test_roofline_report_terms():
+    r = roofline_report(flops=197e12, bytes_accessed=819e9,
+                        collective_bytes=50e9, n_chips=256,
+                        model_flops=197e12 * 256 * 0.5)
+    assert r["compute_s"] == pytest.approx(1.0)
+    assert r["memory_s"] == pytest.approx(1.0)
+    assert r["collective_s"] == pytest.approx(1.0)
+    assert r["mfu_upper_bound"] == pytest.approx(0.5)
+
+
+def test_collective_regex():
+    hlo = """
+  %ar = bf16[1024,512]{1,0} all-reduce(%x), replica_groups={}
+  %ag = f32[64]{0} all-gather(%y), dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert got["all-reduce"] == 1024 * 512 * 2
+    assert got["all-gather"] == 64 * 4
+    assert got["collective-permute"] == 64 * 4
+    assert got["total"] == sum(
+        got[k] for k in ("all-reduce", "all-gather", "collective-permute"))
+
+
+# ---------------------------------------------------------------- serving
+def test_serve_engine_generates():
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = get_smoke_config("qwen3_8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=64)
+    reqs = [Request(rid=i, prompt=np.arange(5 + i) % cfg.vocab, max_new=6)
+            for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=200)
+    for r in reqs:
+        assert r.done and len(r.out) >= 6
+        assert all(0 <= t < cfg.vocab_padded for t in r.out)
+
+
+def test_serve_engine_slot_recycling():
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = get_smoke_config("mamba2_370m")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=48)
+    reqs = [Request(rid=i, prompt=np.arange(4), max_new=4) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=100)
+    assert all(r.done for r in reqs)

@@ -1,0 +1,167 @@
+"""Public solve() API + digital baselines + crosspoint + power/components."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import solve
+from repro.core.baselines import cg_solve, cholesky_solve, jacobi_solve
+from repro.core.components import component_counts, component_reduction, netlist_counts
+from repro.core.crosspoint import crosspoint_layout
+from repro.core.network import build_proposed
+from repro.core.power import system_power
+from repro.core.transform import transform_2n
+from repro.data.spd import random_sdd, random_spd, random_rhs_from_solution
+
+
+def _sys(seed, n, density=1.0):
+    r = np.random.default_rng(seed)
+    a = random_spd(r, n, density=density)
+    x, b = random_rhs_from_solution(r, a)
+    return a, x, b
+
+
+@pytest.mark.parametrize("method", ["analog_2n", "analog_n", "cholesky", "cg"])
+def test_solve_methods_agree(method):
+    a, x, b = _sys(1, 12)
+    res = solve(a, b, method=method, x_ref=x)
+    assert res.stable
+    np.testing.assert_allclose(res.x, x, rtol=1e-5, atol=1e-8)
+
+
+def test_solve_jacobi_on_sdd():
+    r = np.random.default_rng(5)
+    a = random_sdd(r, 12)
+    x, b = random_rhs_from_solution(r, a)
+    res = solve(a, b, method="jacobi")
+    np.testing.assert_allclose(res.x, x, rtol=1e-5, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 5000), n=st.integers(2, 20))
+def test_digital_baselines_match_numpy(seed, n):
+    a, x, b = _sys(seed, n)
+    np.testing.assert_allclose(np.asarray(cholesky_solve(a, b)), x,
+                               rtol=1e-6, atol=1e-9)
+    res = cg_solve(a, b, tol=1e-12)
+    np.testing.assert_allclose(np.asarray(res.x), x, rtol=1e-5, atol=1e-8)
+    assert int(res.iterations) <= n + 5   # CG converges in <= n steps
+
+
+def test_solve_settling_info():
+    a, x, b = _sys(2, 8)
+    res = solve(a, b, method="analog_2n", compute_settling=True)
+    assert res.settle_time is not None and 0 < res.settle_time < 1.0
+    assert res.info["n_amps"] <= 2 * 8
+
+
+# ------------------------------------------------------------- crosspoint
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 5000), n=st.integers(2, 14))
+def test_crosspoint_roundtrip(seed, n):
+    """Fig. 11 layout reassembles to the circuit DC operator."""
+    a, x, b = _sys(seed, n)
+    tr = transform_2n(a, b)
+    layout = crosspoint_layout(tr)
+    m = np.asarray(layout.dc_operator())
+    m_want = np.asarray(tr.assembled())
+    np.testing.assert_allclose(m, m_want, rtol=1e-9,
+                               atol=1e-12 * abs(m_want).max())
+    assert np.asarray(layout.g_array).min() >= 0.0
+
+
+def test_crosspoint_mvm_currents():
+    a, x, b = _sys(3, 6)
+    layout = crosspoint_layout(transform_2n(a, b))
+    v = np.random.default_rng(0).standard_normal(12)
+    g = np.asarray(layout.g_array)
+    want = v * g.sum(axis=1) - g @ v
+    np.testing.assert_allclose(np.asarray(layout.mvm_currents(v)), want,
+                               rtol=1e-9, atol=1e-18)
+
+
+# ---------------------------------------------------------- components
+def test_table2_formulas():
+    c_pre = component_counts("preliminary", 100)
+    c_pro = component_counts("proposed", 100)
+    assert c_pre["opamps"] == 2 * (100 ** 2 + 100)
+    assert c_pro["opamps"] == 400
+    assert c_pro["variable_resistors"] == 2 * 100 ** 2 + 1
+    # paper: ~70% total component reduction
+    assert component_reduction(100) > 0.65
+
+
+def test_netlist_counts_bounded_by_table2():
+    a, x, b = _sys(9, 10)
+    net = build_proposed(a, b)
+    actual = netlist_counts(net)
+    worst = component_counts("proposed", 10)
+    assert actual["opamps"] <= worst["opamps"]
+    assert actual["analog_switches"] <= worst["analog_switches"] + 2 * 10
+
+
+# --------------------------------------------------------------- power
+def test_power_terms():
+    a, x, b = _sys(4, 10)
+    tr = transform_2n(a, b)
+    net = build_proposed(a, b)
+    p = system_power(a, np.asarray(tr.k_b), x,
+                     n_amps=net.n_amps, n_switches=30)
+    assert p["network_w"] > 0
+    assert p["cells_w"] >= 0
+    assert p["total_w"] >= p["network_w"]
+
+
+def test_power_scales_quadratically_in_alpha():
+    """Eq. 27/31: conductance scaling scales resistive power linearly."""
+    a, x, b = _sys(4, 8)
+    tr = transform_2n(a, b)
+    p1 = system_power(a, np.asarray(tr.k_b), x)["network_w"]
+    p2 = system_power(0.5 * a, 0.5 * np.asarray(tr.k_b), x)["network_w"]
+    np.testing.assert_allclose(p2, 0.5 * p1, rtol=1e-9)
+
+
+# -------------------------------------------------------------- edge cases
+def test_solve_1x1():
+    a = np.array([[100e-6]])
+    b = np.array([3e-5])
+    res = solve(a, b, method="analog_2n")
+    np.testing.assert_allclose(res.x, [0.3], rtol=1e-6)
+
+
+def test_solve_diagonal_system():
+    """Diagonal SPD = fully passive (trivially diagonally dominant
+    modulo K_s); solution recovered exactly."""
+    rng = np.random.default_rng(3)
+    d = rng.uniform(100e-6, 900e-6, 6)
+    a = np.diag(d)
+    x = rng.uniform(-0.4, 0.4, 6)
+    b = a @ x
+    res = solve(a, b, method="analog_2n", x_ref=x)
+    np.testing.assert_allclose(res.x, x, rtol=1e-6)
+
+
+def test_solve_zero_rhs_entry():
+    """b_i = 0 -> supply switch NC for that node; still solvable."""
+    a, x, b = _sys(6, 8)
+    b2 = b.copy()
+    b2[3] = 0.0
+    x2 = np.linalg.solve(a, b2)
+    res = solve(a, b2, method="analog_2n")
+    np.testing.assert_allclose(res.x, x2, rtol=1e-5, atol=1e-9)
+
+
+def test_gremban_policy_can_break_pd():
+    """The paper's motivation for Eq. 22: Gremban's D does not keep the
+    transformed operator PD on general SPD systems."""
+    from repro.core.transform import transform_2n
+
+    broke = 0
+    for seed in range(20):
+        a, x, b = _sys(seed + 500, 12)
+        tr = transform_2n(a, b, d_policy="gremban")
+        m = np.asarray(tr.assembled())
+        ev = np.linalg.eigvalsh((m + m.T) / 2)
+        if ev[0] < -1e-9 * abs(m).max():
+            broke += 1
+    assert broke > 0     # at least some systems break under Gremban
