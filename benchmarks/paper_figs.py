@@ -3,22 +3,40 @@
 Each function mirrors the paper's experimental protocol; EXPERIMENTS.md
 §Paper-claims records the comparison against the paper's reported
 numbers.  Default sizes are CPU-reduced; ``--full`` widens them.
+
+The sweeps run on the batched engine (:mod:`repro.core.engine`): each
+size/parameter class builds its netlists host-side, then errors come
+from one ``operating_point_batch`` (vmapped x64 DC solve) and settling
+times from one ``transient_batch`` (stacked-eig modal path) per class,
+instead of per-system Python loops.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import US, gen_systems, stats, timed
+from benchmarks.common import US, gen_systems, stats
+from repro.core import engine
 from repro.core.network import build_preliminary, build_proposed
-from repro.core.operating_point import IDEAL, NonIdealities, operating_point
-from repro.core.specs import AD712, LTC2050, LTC6268, OPAMPS
+from repro.core.operating_point import NonIdealities, operating_point_batch
+from repro.core.specs import AD712, OPAMPS
 from repro.core.transient import lti_transient
 from repro.core.transient_nl import nonlinear_transient
 
 
 MACRO = NonIdealities(offset_mode="none")          # SPICE-macro-equivalent
 TABLE1 = NonIdealities(offset_mode="random")       # datasheet-max offsets
+
+
+def _batch_metrics(nets, xs, *, nonideal, opamp=AD712):
+    """(err_fullscale[], settle_us[]) for a class of netlists, computed
+    as one batched operating point + one batched settling call."""
+    op = operating_point_batch(
+        nets, opamp, nonideal=nonideal, x_ref=np.stack(xs)
+    )
+    # the figures report the paper's exact (modal) settling times
+    tr = engine.transient_batch(nets, opamp, method="eig")
+    return op.err_fullscale, tr.settle_time * 1e6
 
 
 def fig8_stability(full: bool = False) -> list[dict]:
@@ -46,12 +64,11 @@ def fig9_preliminary(full: bool = False) -> list[dict]:
     count = 6 if not full else 20
     rows = []
     for n in sizes:
-        errs, settles = [], []
-        for a, x, b in gen_systems(900 + n, n, count):
-            net = build_preliminary(a, b)
-            op = operating_point(net, x_ref=x, nonideal=MACRO)
-            errs.append(op.err_fullscale)
-            settles.append(lti_transient(net).settle_time * 1e6)
+        systems = gen_systems(900 + n, n, count)
+        nets = [build_preliminary(a, b) for a, _x, b in systems]
+        errs, settles = _batch_metrics(
+            nets, [x for _a, x, _b in systems], nonideal=MACRO
+        )
         s = stats(settles)
         e = stats(errs)
         rows.append({
@@ -64,20 +81,24 @@ def fig9_preliminary(full: bool = False) -> list[dict]:
 
 
 def fig10_beta(full: bool = False) -> list[dict]:
-    """D-matrix scaling beta: smaller beta -> faster + more accurate."""
+    """D-matrix scaling beta: smaller beta -> faster + more accurate.
+
+    All (system, beta) variants share one proposed-design pattern, so
+    the whole figure is a single batched OP + settling call.
+    """
     betas = (0.5, 0.75, 1.0, 2.0, 4.0)
-    rows = []
-    for a, x, b in gen_systems(10, 16, 2):
+    systems = gen_systems(10, 16, 2)
+    nets, xs, names = [], [], []
+    for a, x, b in systems:
         for beta in betas:
-            net = build_proposed(a, b, d_policy="scaled", beta=beta)
-            op = operating_point(net, x_ref=x, nonideal=MACRO)
-            t = lti_transient(net).settle_time * 1e6
-            rows.append({
-                "name": f"fig10_beta{beta}",
-                "settle_us": t,
-                "err_pct": op.err_fullscale * 100,
-            })
-    return rows
+            nets.append(build_proposed(a, b, d_policy="scaled", beta=beta))
+            xs.append(x)
+            names.append(f"fig10_beta{beta}")
+    errs, settles = _batch_metrics(nets, xs, nonideal=MACRO)
+    return [
+        {"name": name, "settle_us": float(t), "err_pct": float(e) * 100}
+        for name, t, e in zip(names, settles, errs)
+    ]
 
 
 def fig12_complexity(full: bool = False) -> list[dict]:
@@ -87,11 +108,11 @@ def fig12_complexity(full: bool = False) -> list[dict]:
     count = 6 if not full else 20
     rows = []
     for n in sizes:
-        settles, gmax = [], []
-        for a, x, b in gen_systems(1200 + n, n, count):
-            net = build_proposed(a, b)
-            settles.append(lti_transient(net).settle_time * 1e6)
-            gmax.append(net.max_conductance() / US)
+        systems = gen_systems(1200 + n, n, count)
+        nets = [build_proposed(a, b) for a, _x, b in systems]
+        tr = engine.transient_batch(nets, method="eig")
+        settles = tr.settle_time * 1e6
+        gmax = [net.max_conductance() / US for net in nets]
         s = stats(settles)
         rows.append({
             "name": f"fig12_n{n}",
@@ -108,23 +129,24 @@ def _fixed_conductance(name, sizes, density, g_target, count):
     rng = np.random.default_rng(13)
     rows = []
     for n in sizes:
-        errs, settles, found = [], [], 0
+        nets, xs = [], []
         for _ in range(count):
             out = random_spd_fixed_conductance(
                 rng, n, g_target=g_target, density=density)
             if out is None:
                 continue
             a, x, b = out
-            found += 1
-            net = build_proposed(a, b)
-            op = operating_point(net, x_ref=x, nonideal=MACRO)
-            errs.append(op.err_fullscale)
-            settles.append(lti_transient(net).settle_time * 1e6)
+            nets.append(build_proposed(a, b))
+            xs.append(x)
+        if not nets:
+            rows.append({"name": f"{name}_n{n}", "found": 0})
+            continue
+        errs, settles = _batch_metrics(nets, xs, nonideal=MACRO)
         s = stats(settles)
         e = stats(errs)
         rows.append({
             "name": f"{name}_n{n}",
-            "found": found,
+            "found": len(nets),
             "settle_med_us": s["median"],
             "err_med_pct": e["median"] * 100,
         })
@@ -150,14 +172,11 @@ def fig15_opamps(full: bool = False) -> list[dict]:
     count = 4 if not full else 12
     n = 20
     systems = gen_systems(15, n, count)
+    nets = [build_proposed(a, b) for a, _x, b in systems]
+    xs = [x for _a, x, _b in systems]
     rows = []
     for amp_name, spec in OPAMPS.items():
-        errs, settles = [], []
-        for a, x, b in systems:
-            net = build_proposed(a, b)
-            op = operating_point(net, spec, x_ref=x, nonideal=TABLE1)
-            errs.append(op.err_fullscale)
-            settles.append(lti_transient(net, spec).settle_time * 1e6)
+        errs, settles = _batch_metrics(nets, xs, nonideal=TABLE1, opamp=spec)
         e, s = stats(errs), stats(settles)
         rows.append({
             "name": f"fig15_{amp_name}",
@@ -172,18 +191,18 @@ def fig16_alpha(full: bool = False) -> list[dict]:
     parasitic error (and power), Eq. 27."""
     alphas = (0.01, 0.1, 1.0, 10.0)
     wiper = NonIdealities(offset_mode="none", wiper_ohm=50.0)
-    rows = []
-    for a, x, b in gen_systems(16, 12, 2):
+    systems = gen_systems(16, 12, 2)
+    nets, xs, names = [], [], []
+    for a, x, b in systems:
         for alpha in alphas:
-            net = build_proposed(a, b, alpha=alpha)
-            op = operating_point(net, x_ref=x, nonideal=wiper)
-            t = lti_transient(net).settle_time * 1e6
-            rows.append({
-                "name": f"fig16_alpha{alpha}",
-                "err_pct": op.err_fullscale * 100,
-                "settle_us": t,
-            })
-    return rows
+            nets.append(build_proposed(a, b, alpha=alpha))
+            xs.append(x)
+            names.append(f"fig16_alpha{alpha}")
+    errs, settles = _batch_metrics(nets, xs, nonideal=wiper)
+    return [
+        {"name": name, "err_pct": float(e) * 100, "settle_us": float(t)}
+        for name, t, e in zip(names, settles, errs)
+    ]
 
 
 def table1_specs(full: bool = False) -> list[dict]:

@@ -3,6 +3,12 @@
 Prints ``name,metric,value`` CSV rows.  ``--full`` reproduces the
 paper-scale sweeps (slow); the default is a reduced CPU-friendly pass.
 
+The figure sweeps run on the batched engine (``repro.core.engine``):
+each size/parameter class is one batched operating-point call (vmapped
+x64 solve) plus one batched settling call (stacked-eig modal path, or
+the Pallas forward-Euler sweep for ``tpu_complexity``), instead of
+per-system Python loops.
+
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
 """
 

@@ -6,8 +6,13 @@ settle is set by matrix properties (max transformed conductance /
 deviation from diagonal dominance), NOT by n, while the per-step cost is
 one MVM at the memory roofline.
 
-This benchmark measures exactly that, using the fused ``transient_step``
-kernel semantics (reference path on CPU):
+The sweep runs on the batched engine: every system of a size class is
+stamped onto the shared ``(n, design)`` pattern, assembled into one
+``(B, nz, nz)`` operator batch, and integrated together by the
+batch-aware Pallas ``transient_sweep`` kernel (forward Euler, operator
+VMEM-resident, fused ``max |M z + c|`` settling-check reduction).  On
+CPU the kernels execute in interpret mode; on TPU they compile to the
+MXU/VPU path.
 
   * fixed max transformed conductance (the Fig. 13 protocol) across
     sizes -> step count flat in n  (the paper's claim, on TPU terms)
@@ -19,40 +24,36 @@ kernel semantics (reference path on CPU):
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from benchmarks.common import US, emit, stats
+from repro.core import engine
 from repro.core.network import build_proposed
-from repro.core.transient import assemble_state_space
 
 
-def steps_to_settle(a, b, x_ref, *, dt_safety=0.5, max_steps=200_000) -> int:
-    """Forward-Euler steps (= transient_step kernel invocations) until
-    every unknown stays within 1% of the solution."""
-    net = build_proposed(a, b)
-    ss = assemble_state_space(net)
-    m, c = ss.m, ss.c
-    # stable explicit step from the spectral bound
-    rate = np.abs(np.diag(m)).max()
-    dt = dt_safety / rate
-    z = np.zeros(ss.n_states)
-    n = len(x_ref)
-    tol = np.maximum(0.01 * np.abs(x_ref), 1e-4)
-    ok_since = None
-    check = 50
-    for i in range(0, max_steps, check):
-        for _ in range(check):
-            z = z + dt * (m @ z + c)
-        if np.all(np.abs(z[:n] - x_ref) <= tol):
-            if ok_since is None:
-                ok_since = i + check
-                return ok_since
-        else:
-            ok_since = None
-    return max_steps
+def batched_steps_to_settle(
+    nets, x_ref, *, dt_safety=0.5, max_steps=200_000, interpret=None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Forward-Euler steps (Pallas sweep launches x chunk size) until
+    every unknown of every system stays within 1% of its solution.
+
+    Returns ``(steps, residual)`` per system; ``residual`` is the
+    kernel's fused settling-check reduction at the final state.
+    """
+    bss = engine.assemble_batch(nets)
+    steps, _x, res, _dt = engine.euler_settle_batch(
+        bss,
+        np.stack(x_ref),
+        dt_safety=dt_safety,
+        max_steps=max_steps,
+        interpret=interpret,
+    )
+    return steps, res
 
 
-def run(full: bool = False) -> list[dict]:
+def run(full: bool = False, interpret: bool | None = None) -> list[dict]:
     from repro.data.spd import random_spd_fixed_conductance
 
     rng = np.random.default_rng(77)
@@ -60,24 +61,30 @@ def run(full: bool = False) -> list[dict]:
     count = 3 if not full else 8
     rows = []
     for n in sizes:
-        steps, flops, bytes_ = [], [], []
+        nets, xs = [], []
         for _ in range(count):
             out = random_spd_fixed_conductance(rng, n, g_target=800 * US)
             if out is None:
                 continue
             a, x, b = out
-            k = steps_to_settle(a, b, x)
-            nz = 2 * n
-            steps.append(k)
-            flops.append(2.0 * nz * nz)                 # per step
-            bytes_.append(nz * nz * 4 + 3 * nz * 4)     # M + z/c/z' f32
-        s = stats(steps)
+            nets.append(build_proposed(a, b))
+            xs.append(x)
+        if not nets:
+            rows.append({"name": f"tpu_complexity_n{n}", "count": 0})
+            continue
+        t0 = time.perf_counter()
+        steps, res = batched_steps_to_settle(nets, xs, interpret=interpret)
+        wall = time.perf_counter() - t0
+        nz = 2 * n
+        s = stats(list(steps))
         rows.append({
             "name": f"tpu_complexity_n{n}",
             "steps_median": s["median"],
             "steps_p90": s["p90"],
-            "flops_per_step": float(np.median(flops)) if flops else 0.0,
-            "bytes_per_step": float(np.median(bytes_)) if bytes_ else 0.0,
+            "flops_per_step": 2.0 * nz * nz,
+            "bytes_per_step": nz * nz * 4 + 3 * nz * 4,
+            "residual_max": float(np.max(res)),
+            "batch_wall_s": wall,
             "count": s["n"],
         })
     return rows

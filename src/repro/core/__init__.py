@@ -15,9 +15,32 @@ This package implements the paper's contribution:
   * the crosspoint-array layout (Sec. IV-A4), power model (Eqs. 28-31)
     and component-count formulas (Table II).
 
-Circuit analyses require float64: importing ``repro.core`` enables JAX
-x64 mode globally.  Model/training code elsewhere in the repo always
-passes explicit dtypes, so it is unaffected.
+Batched-engine architecture
+---------------------------
+The physics core is batched end to end (:mod:`repro.core.engine`):
+
+* **Stamp cache** — netlists store structure-of-arrays component stamps
+  (``branch_i/j/g``, ``cell_i/j/w``); the static sparsity structure of
+  the LTI state-space (cell slots, buffer/amp state layout, scatter
+  indices) is a :class:`~repro.core.engine.StampPattern`, cached per
+  ``(n, design)`` — for the proposed design cells live only on the
+  ``(i, n+i)`` pairs, so one pattern serves every batch of that family.
+  Assembly is vectorized ``np.add.at`` scatter-adds into
+  ``(B, nz, nz)`` operators; a slot a system does not populate stamps
+  ``w = 0`` (amp dynamics stay as a stable decoupled subsystem).
+* **vmap vs Pallas path selection** — the operating point is one
+  ``jax.vmap(jnp.linalg.solve)`` over the batch; transient settling
+  uses the exact stacked eigendecomposition up to
+  :data:`~repro.core.engine.EIG_STATE_LIMIT` states and the batch-aware
+  Pallas ``transient_step``/``transient_sweep`` forward-Euler kernels
+  (fused ``max |M z + c|`` settling-check reduction) beyond.
+  ``solve`` is a thin B=1 wrapper over ``solve_batch``.
+* **x64 policy** — circuit analyses require float64 (1e-12 F node
+  capacitances against 1e6 rad/s amp rates): importing ``repro.core``
+  enables JAX x64 mode globally, and assembly/exact paths run float64
+  throughout.  Only the Pallas Euler sweep drops to float32, which the
+  1 % settling tolerance absorbs.  Model/training code elsewhere in the
+  repo always passes explicit dtypes, so it is unaffected.
 """
 
 from jax import config as _config
@@ -54,11 +77,29 @@ from repro.core.transient import (  # noqa: E402
     settling_time,
 )
 from repro.core.operating_point import (  # noqa: E402
+    BatchOperatingPoint,
     NonIdealities,
     OperatingPoint,
     operating_point,
+    operating_point_batch,
 )
-from repro.core.solver import SolveResult, solve  # noqa: E402
+from repro.core.engine import (  # noqa: E402
+    BatchTransientResult,
+    BatchedStateSpace,
+    StampPattern,
+    assemble_batch,
+    dc_solve_batch,
+    euler_settle_batch,
+    pattern_of,
+    pattern_union,
+    transient_batch,
+)
+from repro.core.solver import (  # noqa: E402
+    BatchSolveResult,
+    SolveResult,
+    solve,
+    solve_batch,
+)
 from repro.core.sdd import is_diagonally_dominant, sdd_margin  # noqa: E402
 from repro.core.power import system_power  # noqa: E402
 from repro.core.components import component_counts  # noqa: E402
@@ -88,9 +129,22 @@ __all__ = [
     "settling_time",
     "NonIdealities",
     "OperatingPoint",
+    "BatchOperatingPoint",
     "operating_point",
+    "operating_point_batch",
+    "BatchTransientResult",
+    "BatchedStateSpace",
+    "StampPattern",
+    "assemble_batch",
+    "dc_solve_batch",
+    "euler_settle_batch",
+    "pattern_of",
+    "pattern_union",
+    "transient_batch",
     "SolveResult",
+    "BatchSolveResult",
     "solve",
+    "solve_batch",
     "is_diagonally_dominant",
     "sdd_margin",
     "system_power",

@@ -11,6 +11,13 @@ pre-assembled matrix, so that component non-idealities (digital-pot
 quantization, tolerance) can be applied per resistor exactly as they
 would occur in hardware.
 
+Storage is structure-of-arrays: every component class is a set of
+parallel index/value arrays (``branch_i/branch_j/branch_g``,
+``cell_i/cell_j/cell_w``), so operator assembly — here and in the
+batched engine (:mod:`repro.core.engine`) — is vectorized scatter-adds
+rather than per-component Python loops.  ``Netlist.cells`` remains as a
+compatibility view producing :class:`NegCell` objects.
+
 Conventions
 -----------
 * Nodes ``0 .. n_nodes-1`` are the unknown voltages (2n for the proposed
@@ -23,6 +30,10 @@ Conventions
   legs, supply resistors) and ``a_cell`` is the op-amp output driving a
   cell's mirror node (steady state ``a = 2 v_i - v_j``, Sec. II-B).
 * ``s`` is the Norton supply current ``k_s * x_s`` (= b by Eq. 13).
+* Cell arrays are ordered pair cells first (lexicographic ``(i, j)``,
+  the upper-triangle extraction order) followed by ground cells
+  (``cell_j == -1``) in ascending node order.  The op-amp ordering every
+  consumer relies on (offset draws, state layout) follows from this.
 """
 
 from __future__ import annotations
@@ -33,6 +44,9 @@ import numpy as np
 
 from repro.core.specs import CircuitParams, DEFAULT_PARAMS
 from repro.core import transform as T
+
+_EMPTY_I = np.zeros(0, dtype=np.int64)
+_EMPTY_F = np.zeros(0, dtype=np.float64)
 
 
 @dataclasses.dataclass
@@ -69,7 +83,10 @@ class Netlist:
     ground_g: np.ndarray             # (n_nodes,) float >= 0
     supply_g: np.ndarray             # (n_nodes,) float >= 0 (Eq. 13 stamps)
     supply_v: np.ndarray             # (n_nodes,) float (+/- rail or 0=NC)
-    cells: list[NegCell] = dataclasses.field(default_factory=list)
+    # negative-resistance cells, structure-of-arrays (j == -1: ground cell)
+    cell_i: np.ndarray = dataclasses.field(default_factory=lambda: _EMPTY_I)
+    cell_j: np.ndarray = dataclasses.field(default_factory=lambda: _EMPTY_I)
+    cell_w: np.ndarray = dataclasses.field(default_factory=lambda: _EMPTY_F)
     params: CircuitParams = DEFAULT_PARAMS
     # switch-bearing element circuits touching each node (Fig. 6):
     # preliminary design = every matrix element; proposed = only the
@@ -77,8 +94,21 @@ class Netlist:
     element_count: np.ndarray | None = None
 
     @property
+    def cells(self) -> list[NegCell]:
+        """Compatibility AoS view of the cell arrays."""
+        return [
+            NegCell(i=int(i), j=int(j), w=float(w))
+            for i, j, w in zip(self.cell_i, self.cell_j, self.cell_w)
+        ]
+
+    @property
+    def n_cells(self) -> int:
+        return int(self.cell_i.shape[0])
+
+    @property
     def n_amps(self) -> int:
-        return sum(c.n_amps for c in self.cells)
+        # pair cells carry two amps, ground cells one
+        return int(np.sum(np.where(self.cell_j >= 0, 2, 1))) if self.n_cells else 0
 
     @property
     def n_branches(self) -> int:
@@ -86,7 +116,7 @@ class Netlist:
 
     @property
     def is_passive(self) -> bool:
-        return not self.cells
+        return self.n_cells == 0
 
     @property
     def s(self) -> np.ndarray:
@@ -114,21 +144,21 @@ class Netlist:
         proposed design ``v = [x; -x]``.
         """
         m = self.assemble_passive()
-        for c in self.cells:
-            if c.j >= 0:
-                m[c.i, c.j] += c.w
-                m[c.j, c.i] += c.w
-                m[c.i, c.i] -= c.w
-                m[c.j, c.j] -= c.w
-            else:
-                m[c.i, c.i] -= c.w
+        pair = self.cell_j >= 0
+        pi, pj, pw = self.cell_i[pair], self.cell_j[pair], self.cell_w[pair]
+        np.add.at(m, (pi, pj), pw)
+        np.add.at(m, (pj, pi), pw)
+        np.add.at(m, (pi, pi), -pw)
+        np.add.at(m, (pj, pj), -pw)
+        gi, gw = self.cell_i[~pair], self.cell_w[~pair]
+        np.add.at(m, (gi, gi), -gw)
         return m
 
     def max_conductance(self) -> float:
         """Largest branch/cell conductance (the Figs. 12-14 regressor)."""
         gmax = float(self.branch_g.max()) if self.n_branches else 0.0
-        if self.cells:
-            gmax = max(gmax, max(c.w for c in self.cells))
+        if self.n_cells:
+            gmax = max(gmax, float(self.cell_w.max()))
         return gmax
 
     def recovered_solution(self, v: np.ndarray) -> np.ndarray:
@@ -145,7 +175,7 @@ class Netlist:
             branch_g=p(self.branch_g),
             ground_g=p(self.ground_g),
             supply_g=p(self.supply_g),
-            cells=[dataclasses.replace(c, w=float(p(c.w))) for c in self.cells],
+            cell_w=p(self.cell_w),
         )
 
     def with_wiper(self, r_wiper: float) -> "Netlist":
@@ -164,7 +194,7 @@ class Netlist:
             branch_g=w(self.branch_g),
             ground_g=w(self.ground_g),
             supply_g=w(self.supply_g),
-            cells=[dataclasses.replace(c, w=float(w(c.w))) for c in self.cells],
+            cell_w=w(self.cell_w),
         )
 
     def quantized(self, bits: int, g_full_scale: float | None = None) -> "Netlist":
@@ -195,8 +225,7 @@ class Netlist:
             branch_g=q(self.branch_g, step),
             ground_g=q(self.ground_g, step),
             supply_g=q(self.supply_g, sup_step),
-            cells=[dataclasses.replace(c, w=float(q(c.w, step)))
-                   for c in self.cells],
+            cell_w=q(self.cell_w, step),
         )
 
 
@@ -207,11 +236,13 @@ def _extract_components(
     *,
     pair_mask: np.ndarray | None,
     tol: float,
-) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, list[NegCell]]:
-    """Decompose a DC operator into physical components.
+) -> tuple[np.ndarray, ...]:
+    """Decompose a DC operator into physical component arrays.
 
     branch g_ij = -M_ij for M_ij < 0; cells for M_ij > 0; ground legs
-    from column sums minus supply stamps.
+    from column sums minus supply stamps.  Returns
+    ``(branch_i, branch_j, branch_g, ground_g, cell_i, cell_j, cell_w)``
+    with pair cells in lexicographic order followed by ground cells.
     """
     n = m_dc.shape[0]
     iu, ju = np.triu_indices(n, k=1)
@@ -226,19 +257,28 @@ def _extract_components(
             "positive off-diagonal outside allowed cell positions; "
             "transform violated its guarantee"
         )
-    cells = [
-        NegCell(i=int(i), j=int(j), w=float(w))
-        for i, j, w in zip(iu[pos], ju[pos], vals[pos])
-    ]
+    ci, cj, cw = iu[pos], ju[pos], vals[pos]
 
     # physical ground legs: column sums minus supply stamp
     gamma = m_dc.sum(axis=0) - supply_g
-    gcells = [
-        NegCell(i=int(i), j=-1, w=float(-g)) for i, g in enumerate(gamma) if g < -tol
-    ]
-    cells.extend(gcells)
+    gneg = gamma < -tol
+    gi = np.nonzero(gneg)[0]
+    cell_i = np.concatenate([ci, gi]).astype(np.int64)
+    cell_j = np.concatenate([cj, np.full(gi.shape, -1)]).astype(np.int64)
+    cell_w = np.concatenate([cw, -gamma[gneg]]).astype(np.float64)
     ground_g = np.where(gamma > tol, gamma, 0.0)
-    return bi, bj, bg, ground_g, cells
+    return bi, bj, bg, ground_g, cell_i, cell_j, cell_w
+
+
+def _cell_node_counts(
+    n_nodes: int, cell_i: np.ndarray, cell_j: np.ndarray
+) -> np.ndarray:
+    """Per-node count of cell terminals (pair cells touch two nodes)."""
+    counts = np.zeros(n_nodes, dtype=np.float64)
+    np.add.at(counts, cell_i, 1.0)
+    pair = cell_j >= 0
+    np.add.at(counts, cell_j[pair], 1.0)
+    return counts
 
 
 def build_preliminary(
@@ -261,7 +301,7 @@ def build_preliminary(
     supply_v = params.supply_v * np.sign(b)
 
     scale = max(np.abs(a).max(), 1.0) * tol
-    bi, bj, bg, ground_g, cells = _extract_components(
+    bi, bj, bg, ground_g, ci, cj, cw = _extract_components(
         a, supply_g, supply_v, pair_mask=None, tol=scale
     )
     # every matrix element is a switch-bearing element circuit (Fig. 6):
@@ -270,10 +310,7 @@ def build_preliminary(
     elem = np.zeros(n, dtype=np.float64)
     np.add.at(elem, bi, 1.0)
     np.add.at(elem, bj, 1.0)
-    for c in cells:
-        elem[c.i] += 1.0
-        if c.j >= 0:
-            elem[c.j] += 1.0
+    elem += _cell_node_counts(n, ci, cj)
     elem += (ground_g > 0).astype(np.float64)
     elem += (supply_g > 0).astype(np.float64)
     return Netlist(
@@ -286,7 +323,9 @@ def build_preliminary(
         ground_g=ground_g,
         supply_g=supply_g,
         supply_v=supply_v,
-        cells=cells,
+        cell_i=ci,
+        cell_j=cj,
+        cell_w=cw,
         params=params,
         element_count=elem,
     )
@@ -327,19 +366,15 @@ def build_proposed(
     pair_mask[idx, idx + n] = True
 
     scale = max(np.abs(m_dc).max(), 1.0) * tol
-    bi, bj, bg, ground_g, cells = _extract_components(
+    bi, bj, bg, ground_g, ci, cj, cw = _extract_components(
         m_dc, supply_g, supply_v, pair_mask=pair_mask, tol=scale
     )
     # crosspoint pots are switchless (Sec. IV-A4): only the external
     # K_B-diagonal element circuits and the supply switches load nodes.
-    elem = np.zeros(2 * n, dtype=np.float64)
-    for c in cells:
-        elem[c.i] += 1.0
-        if c.j >= 0:
-            elem[c.j] += 1.0
+    elem = _cell_node_counts(2 * n, ci, cj)
     elem += (supply_g > 0).astype(np.float64)
     return Netlist(
-        design="proposed" if cells else "passive",
+        design="proposed" if ci.size else "passive",
         n_unknowns=n,
         n_nodes=2 * n,
         branch_i=bi,
@@ -348,7 +383,9 @@ def build_proposed(
         ground_g=ground_g,
         supply_g=supply_g,
         supply_v=supply_v,
-        cells=cells,
+        cell_i=ci,
+        cell_j=cj,
+        cell_w=cw,
         params=params,
         element_count=elem,
     )

@@ -36,6 +36,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import engine
 from repro.core.network import Netlist
 from repro.core.specs import OpAmpSpec, AD712
 from repro.core.transient import assemble_state_space
@@ -151,4 +152,107 @@ def operating_point(
         max_rel_error=max_rel,
         max_abs_error=max_abs,
         err_fullscale=err_fs,
+    )
+
+
+@dataclasses.dataclass
+class BatchOperatingPoint:
+    """Batched DC analysis: per-system arrays over a shared stamp pattern."""
+
+    x: np.ndarray                 # (B, n_unknowns)
+    v: np.ndarray                 # (B, n_nodes)
+    amp_outputs: np.ndarray       # (B, n_amp_slots); inactive slots = 0
+    amp_saturated: np.ndarray     # (B,) bool
+    max_rel_error: np.ndarray | None    # (B,)
+    max_abs_error: np.ndarray | None    # (B,)
+    err_fullscale: np.ndarray | None    # (B,)
+    # which amp slots system b actually populates (B, n_amp_slots);
+    # active slots in slot order == the net's amp order
+    amp_active: np.ndarray | None = None
+
+    def __len__(self) -> int:
+        return self.x.shape[0]
+
+    def __getitem__(self, b: int) -> OperatingPoint:
+        amps = self.amp_outputs[b]
+        if self.amp_active is not None:
+            amps = amps[self.amp_active[b]]   # single-path n_amps shape
+        return OperatingPoint(
+            x=self.x[b],
+            v=self.v[b],
+            amp_outputs=amps,
+            amp_saturated=bool(self.amp_saturated[b]),
+            max_rel_error=(
+                None if self.max_rel_error is None
+                else float(self.max_rel_error[b])
+            ),
+            max_abs_error=(
+                None if self.max_abs_error is None
+                else float(self.max_abs_error[b])
+            ),
+            err_fullscale=(
+                None if self.err_fullscale is None
+                else float(self.err_fullscale[b])
+            ),
+        )
+
+
+def operating_point_batch(
+    nets: list[Netlist],
+    opamp: OpAmpSpec = AD712,
+    *,
+    nonideal: NonIdealities = DEFAULT_NONIDEAL,
+    x_ref: np.ndarray | None = None,
+    pattern: "engine.StampPattern | None" = None,
+) -> BatchOperatingPoint:
+    """Batched DC solve of the (non-ideal) circuits.
+
+    The per-system error model is applied exactly as in the single path
+    (quantize -> perturb -> wiper per netlist, per-amp offset draws with
+    the same per-system RNG stream), then the whole batch is assembled
+    on one shared stamp pattern and solved with the engine's vmapped
+    x64 linear solve.  ``x_ref`` is (B, n) (or None to skip errors).
+    """
+    spec = opamp
+    if not nonideal.use_finite_gain:
+        spec = dataclasses.replace(spec, open_loop_gain=1e15)
+    nets_ni = [apply_nonidealities(net, nonideal) for net in nets]
+    v_os = [
+        draw_offsets(spec, net.n_amps, nonideal.offset_mode, nonideal.seed)
+        for net in nets_ni
+    ]
+    bss = engine.assemble_batch(nets_ni, spec, v_os=v_os, pattern=pattern)
+    z = engine.dc_solve_batch(bss)
+
+    nn = bss.n_nodes
+    nu = bss.n_unknowns
+    v = z[:, :nn]
+    x = v[:, :nu]
+    if bss.amp_out_index.size:
+        a = z[:, bss.amp_out_index] * bss.amp_active
+        sat = np.any(
+            (np.abs(z[:, bss.amp_out_index]) > bss.amp_rail) & bss.amp_active,
+            axis=1,
+        )
+    else:
+        a = np.zeros((len(nets), 0))
+        sat = np.zeros(len(nets), dtype=bool)
+
+    max_rel = max_abs = err_fs = None
+    if x_ref is not None:
+        x_ref = np.asarray(x_ref, dtype=np.float64).reshape(len(nets), nu)
+        err = np.abs(x - x_ref)
+        max_abs = err.max(axis=1)
+        scale = np.maximum(np.abs(x_ref), 1e-3)
+        max_rel = (err / scale).max(axis=1)
+        err_fs = max_abs / np.maximum(np.abs(x_ref).max(axis=1), 1e-12)
+    return BatchOperatingPoint(
+        x=x,
+        v=v,
+        amp_outputs=a,
+        amp_saturated=sat,
+        max_rel_error=max_rel,
+        max_abs_error=max_abs,
+        err_fullscale=err_fs,
+        amp_active=bss.amp_active,
     )

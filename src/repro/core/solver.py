@@ -13,6 +13,14 @@ The analog paths execute the *simulated physics* of the circuit; the
 result therefore carries the circuit's error model (op-amp offsets,
 digital-pot quantization) and its settling time — the quantities the
 paper evaluates.
+
+``solve_batch(A, b)`` is the batched entry point: ``A`` is ``(B, n, n)``
+and ``b`` ``(B, n)``; the netlists are built per system (vectorized
+structure-of-arrays stamping) and then assembled, DC-solved (vmapped
+x64 linear solve) and transient-analyzed as one batch on a shared stamp
+pattern (see :mod:`repro.core.engine`).  ``solve`` is a thin B=1
+wrapper over the same machinery for the analog methods, so single and
+batched results agree by construction.
 """
 
 from __future__ import annotations
@@ -22,16 +30,15 @@ from typing import Any
 
 import numpy as np
 
-from repro.core import baselines
-from repro.core.network import build_preliminary, build_proposed
+from repro.core import baselines, engine
+from repro.core.network import Netlist, build_preliminary, build_proposed
 from repro.core.operating_point import (
     DEFAULT_NONIDEAL,
     IDEAL,
     NonIdealities,
-    operating_point,
+    operating_point_batch,
 )
 from repro.core.specs import OPAMPS, CircuitParams, DEFAULT_PARAMS, OpAmpSpec
-from repro.core.transient import lti_transient
 
 
 @dataclasses.dataclass
@@ -41,6 +48,141 @@ class SolveResult:
     stable: bool = True
     settle_time: float | None = None
     info: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class BatchSolveResult:
+    """Batched :class:`SolveResult`: every field is a (B, ...) array.
+
+    ``info`` maps metric name -> (B,) array (or a scalar shared by the
+    batch).  ``__getitem__`` recovers a per-system :class:`SolveResult`.
+    """
+
+    x: np.ndarray                     # (B, n)
+    method: str
+    stable: np.ndarray                # (B,) bool
+    settle_time: np.ndarray | None    # (B,) or None
+    info: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return self.x.shape[0]
+
+    def __getitem__(self, b: int) -> SolveResult:
+        info = {
+            k: (v[b] if isinstance(v, np.ndarray) and v.ndim >= 1 else v)
+            for k, v in self.info.items()
+        }
+        return SolveResult(
+            x=self.x[b],
+            method=self.method,
+            stable=bool(self.stable[b]),
+            settle_time=(
+                None if self.settle_time is None
+                else float(self.settle_time[b])
+            ),
+            info=info,
+        )
+
+
+def _build_nets(
+    a: np.ndarray,
+    b: np.ndarray,
+    method: str,
+    *,
+    d_policy: str,
+    beta: float,
+    alpha: float,
+    params: CircuitParams,
+) -> list[Netlist]:
+    if method == "analog_2n":
+        return [
+            build_proposed(
+                a[k], b[k], d_policy=d_policy, beta=beta, alpha=alpha,
+                params=params,
+            )
+            for k in range(a.shape[0])
+        ]
+    if method == "analog_n":
+        return [
+            build_preliminary(a[k], b[k], params=params)
+            for k in range(a.shape[0])
+        ]
+    raise ValueError(f"unknown analog method {method!r}")
+
+
+def solve_batch(
+    a,
+    b,
+    *,
+    method: str = "analog_2n",
+    opamp: str | OpAmpSpec = "AD712",
+    nonideal: NonIdealities | None = None,
+    params: CircuitParams = DEFAULT_PARAMS,
+    d_policy: str = "proposed",
+    beta: float = 0.5,
+    alpha: float = 1.0,
+    compute_settling: bool = False,
+    settle_method: str = "auto",
+    settle_max_steps: int = 200_000,
+    x_ref: np.ndarray | None = None,
+) -> BatchSolveResult:
+    """Solve a batch of SPD systems ``A[k] x[k] = b[k]``.
+
+    ``a`` is (B, n, n), ``b`` (B, n); all systems share one circuit
+    design, so assembly, DC solve and settling run as single batched
+    device calls.  ``settle_method`` selects the transient path
+    ("eig" — exact modal; "euler" — Pallas forward-Euler sweep;
+    "auto" — by state count).
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    if a.ndim != 3 or b.ndim != 2 or a.shape[:2] != (b.shape[0], b.shape[1]):
+        raise ValueError(f"expected (B, n, n) and (B, n); got {a.shape}, {b.shape}")
+
+    spec = OPAMPS[opamp] if isinstance(opamp, str) else opamp
+    ni = IDEAL if nonideal is None else nonideal
+
+    nets = _build_nets(
+        a, b, method, d_policy=d_policy, beta=beta, alpha=alpha, params=params
+    )
+    pattern = engine.pattern_union(nets, spec)
+    # non-idealities perturb conductance values, never the cell pattern,
+    # so the clean-net pattern is shared with the OP assembly
+    op = operating_point_batch(
+        nets, spec, nonideal=ni, x_ref=x_ref, pattern=pattern
+    )
+    info: dict[str, Any] = {
+        "design": np.asarray([net.design for net in nets]),
+        "n_nodes": nets[0].n_nodes,
+        "n_amps": np.asarray([net.n_amps for net in nets]),
+        "n_branches": np.asarray([net.n_branches for net in nets]),
+        "is_passive": np.asarray([net.is_passive for net in nets]),
+        "max_conductance": np.asarray(
+            [net.max_conductance() for net in nets]
+        ),
+        "max_rel_error": op.max_rel_error,
+        "max_abs_error": op.max_abs_error,
+        "err_fullscale": op.err_fullscale,
+    }
+    result = BatchSolveResult(
+        x=op.x,
+        method=method,
+        stable=~op.amp_saturated,
+        settle_time=None,
+        info=info,
+    )
+    if compute_settling:
+        tr = engine.transient_batch(
+            nets, spec, method=settle_method, pattern=pattern,
+            max_steps=settle_max_steps,
+        )
+        result.settle_time = tr.settle_time
+        result.stable = result.stable & tr.stable
+        result.info["max_re_eig"] = tr.max_re_eig
+        result.info["dominant_tau"] = tr.dominant_tau
+        result.info["mirror_residual"] = tr.mirror_residual
+        result.info["settle_method"] = tr.method
+    return result
 
 
 def solve(
@@ -65,6 +207,9 @@ def solve(
     paths (still finite-gain/offset-free); pass
     :data:`repro.core.operating_point.DEFAULT_NONIDEAL` or a custom
     :class:`NonIdealities` to engage the hardware error model.
+
+    The analog paths are thin wrappers over :func:`solve_batch` with a
+    batch of one (exact settling via the modal path).
     """
     a = np.asarray(a, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
@@ -84,40 +229,18 @@ def solve(
             },
         )
 
-    spec = OPAMPS[opamp] if isinstance(opamp, str) else opamp
-    ni = IDEAL if nonideal is None else nonideal
-
-    if method == "analog_2n":
-        net = build_proposed(
-            a, b, d_policy=d_policy, beta=beta, alpha=alpha, params=params
-        )
-    elif method == "analog_n":
-        net = build_preliminary(a, b, params=params)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-
-    op = operating_point(net, spec, nonideal=ni, x_ref=x_ref)
-    result = SolveResult(
-        x=op.x,
+    batch = solve_batch(
+        a[None, :, :],
+        b[None, :],
         method=method,
-        stable=not op.amp_saturated,
-        info={
-            "design": net.design,
-            "n_nodes": net.n_nodes,
-            "n_amps": net.n_amps,
-            "n_branches": net.n_branches,
-            "is_passive": net.is_passive,
-            "max_conductance": net.max_conductance(),
-            "max_rel_error": op.max_rel_error,
-            "max_abs_error": op.max_abs_error,
-            "err_fullscale": op.err_fullscale,
-        },
+        opamp=opamp,
+        nonideal=nonideal,
+        params=params,
+        d_policy=d_policy,
+        beta=beta,
+        alpha=alpha,
+        compute_settling=compute_settling,
+        settle_method="eig",
+        x_ref=None if x_ref is None else np.asarray(x_ref)[None, :],
     )
-    if compute_settling:
-        tr = lti_transient(net, spec)
-        result.settle_time = tr.settle_time
-        result.stable = result.stable and tr.stable
-        result.info["max_re_eig"] = tr.max_re_eig
-        result.info["dominant_tau"] = tr.dominant_tau
-        result.info["mirror_residual"] = tr.mirror_residual
-    return result
+    return batch[0]

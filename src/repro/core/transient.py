@@ -22,6 +22,13 @@ design's loss of phase margin when O(n^2) negative-resistance loops
 interact — the settling-time blow-up of Fig. 9 that motivates the
 proposed design.
 
+This module is the *single-system* facade: the stamping and the solve
+paths live in the batched engine (:mod:`repro.core.engine`), which
+assembles the operator with vectorized scatter-adds over the netlist's
+structure-of-arrays stamps.  ``assemble_state_space`` /
+``lti_transient`` here are thin B=1 wrappers, so the single and batched
+paths are the same physics by construction.
+
 Two solution paths:
 
 * :func:`lti_transient` — exact modal solution via dense eigen-
@@ -39,6 +46,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import engine
+from repro.core.engine import settling_time  # noqa: F401  (re-export)
 from repro.core.network import Netlist
 from repro.core.specs import OpAmpSpec, AD712
 
@@ -68,126 +77,27 @@ def assemble_state_space(
     v_os: np.ndarray | float | None = None,
     buffers: bool = True,
 ) -> StateSpace:
-    """Build the LTI operator from a netlist.
+    """Build the LTI operator from a netlist (B=1 engine assembly).
 
     ``v_os`` sets the per-amp input offset voltage (scalar or one value
     per amp); ``None`` means zero offset — settling times are offset-
     independent, so the transient path defaults to the clean model and
     the operating-point path draws offsets explicitly.
     """
-    n = net.n_nodes
-    n_amps = net.n_amps
-    states_per_amp = 2 if opamp.p2_hz > 0 else 1
-    # ground cells have no buffer state (the far node is the stiff ground)
-    n_buf = sum(c_.n_buffers for c_ in net.cells if c_.j >= 0) if buffers else 0
-    nz = n + states_per_amp * n_amps + n_buf
-    m = np.zeros((nz, nz), dtype=np.float64)
-    c = np.zeros(nz, dtype=np.float64)
-
-    # --- per-node capacitance: wiring parasitic + op-amp/buffer input
-    # pins.  Each pair cell puts an amp v+ and a buffer input on BOTH of
-    # its nodes; a ground cell one amp pin on its node.  This is the
-    # physics behind the preliminary design's slowdown: O(n) pins per
-    # node there vs <= 2 in the proposed design.
-    cap = np.full(n, net.params.c_node, dtype=np.float64)
-    for cell_ in net.cells:
-        if cell_.j >= 0:
-            cap[cell_.i] += 2.0 * opamp.c_in
-            cap[cell_.j] += 2.0 * opamp.c_in
-        else:
-            cap[cell_.i] += opamp.c_in
-    if net.element_count is not None:
-        cap += net.params.c_switch * net.element_count
-    inv_c = 1.0 / cap
-
-    # --- passive stamps on voltage rows ---
-    m[:n, :n] = -net.assemble_passive() * inv_c[:, None]
-    c[:n] = net.s * inv_c
-
-    # --- op-amp offsets ---
-    if v_os is None:
-        offs = np.zeros(n_amps)
-    else:
-        offs = np.broadcast_to(np.asarray(v_os, dtype=np.float64), (n_amps,)).copy()
-
-    w_u = opamp.omega_u
-    w_buf = opamp.omega_u            # unity-gain buffer bandwidth = GBW
-    p2 = 2.0 * np.pi * opamp.p2_hz if opamp.p2_hz > 0 else 0.0
-    inv_a0 = 1.0 / opamp.open_loop_gain
-
-    out_idx: list[int] = []
-    int_idx: list[int] = []
-    ptr = n
-    amp_no = 0
-
-    def add_amp(v_plus_node: int, far_src: int | None):
-        """One amp: far_src is the buffer state index (or None = ground).
-
-        Returns index of the output state (drives the cell resistor).
-        """
-        nonlocal ptr, amp_no
-        a_int = ptr
-        ptr += 1
-        if states_per_amp == 2:
-            a_out = ptr
-            ptr += 1
-        else:
-            a_out = a_int
-        int_idx.append(a_int)
-        out_idx.append(a_out)
-
-        # integrator row: da_i/dt = w_u (v+ - (a_out + b)/2 - a_int/A0) + w_u Vos
-        m[a_int, v_plus_node] += w_u
-        m[a_int, a_out] += -0.5 * w_u
-        if far_src is not None:
-            m[a_int, far_src] += -0.5 * w_u
-        m[a_int, a_int] += -w_u * inv_a0
-        c[a_int] += w_u * offs[amp_no]
-        if states_per_amp == 2:
-            # second pole row: da_o/dt = p2 (a_int - a_out); the divider
-            # feedback (-0.5 w_u) above reads a_out, closing the loop
-            # around both poles.
-            m[a_out, a_int] += p2
-            m[a_out, a_out] += -p2
-        amp_no += 1
-        return a_out
-
-    for cell in net.cells:
-        w = cell.w
-        if cell.j >= 0:
-            i, j = cell.i, cell.j
-            if buffers:
-                b1 = ptr; ptr += 1           # buffers v_j for amp1's divider
-                m[b1, j] += w_buf
-                m[b1, b1] += -w_buf
-                b2 = ptr; ptr += 1           # buffers v_i for amp2's divider
-                m[b2, i] += w_buf
-                m[b2, b2] += -w_buf
-            else:
-                b1, b2 = j, i                # ideal buffers: use nodes directly
-            a1 = add_amp(i, b1)
-            a2 = add_amp(j, b2)
-            # cell currents into the nodes
-            m[i, i] += -w * inv_c[i]
-            m[i, a1] += w * inv_c[i]
-            m[j, j] += -w * inv_c[j]
-            m[j, a2] += w * inv_c[j]
-        else:
-            i = cell.i
-            a1 = add_amp(i, None)
-            m[i, i] += -w * inv_c[i]
-            m[i, a1] += w * inv_c[i]
-
-    assert ptr == nz, (ptr, nz)
+    pattern = engine.pattern_of(net, opamp, buffers=buffers)
+    bss = engine.assemble_batch(
+        [net], opamp, v_os=None if v_os is None else [v_os],
+        buffers=buffers, pattern=pattern,
+    )
     return StateSpace(
-        m=m,
-        c=c,
-        n_nodes=n,
+        m=bss.m[0],
+        c=bss.c[0],
+        n_nodes=net.n_nodes,
         n_unknowns=net.n_unknowns,
-        amp_out_index=np.asarray(out_idx, dtype=np.int64),
-        amp_int_index=np.asarray(int_idx, dtype=np.int64),
-        amp_rail=opamp.rail_v,
-        slew=opamp.slew_v_per_s,
+        amp_out_index=pattern.amp_out_index,
+        amp_int_index=pattern.amp_int_index,
+        amp_rail=bss.amp_rail,
+        slew=bss.slew,
     )
 
 
@@ -199,48 +109,6 @@ class TransientResult:
     max_re_eig: float            # stability margin (< 0 for stable)
     dominant_tau: float          # slowest mode time constant [s]
     mirror_residual: float       # proposed design: max |x + x_mirror| (sanity)
-
-
-def _modal_response(
-    ss: StateSpace,
-    times: np.ndarray,
-    z0: np.ndarray | None = None,
-) -> tuple[np.ndarray, np.ndarray]:
-    """Exact LTI response z(t) on the given times via eigen-decomposition.
-
-    Returns (z_star, deviations[t, node]) restricted to voltage nodes.
-    """
-    lam, vec = np.linalg.eig(ss.m)
-    z_star = np.linalg.solve(ss.m, -ss.c)
-    z0 = np.zeros(ss.n_states) if z0 is None else z0
-    coef = np.linalg.solve(vec, z0 - z_star)           # modal coefficients
-    rows = vec[: ss.n_nodes, :] * coef[None, :]        # (nodes, modes)
-    # guard overflow for unstable modes: exp of large positive clipped
-    expo = np.exp(np.clip(lam[None, :] * times[:, None], -745.0, 60.0))
-    dev = np.real(expo @ rows.T)                       # (t, nodes)
-    return z_star, dev
-
-
-def settling_time(
-    dev: np.ndarray,
-    times: np.ndarray,
-    target: np.ndarray,
-    *,
-    rtol: float,
-    atol: float,
-) -> float:
-    """Paper's criterion: first instant beyond which every node stays
-    within 1% of its operating-point value."""
-    tol = np.maximum(rtol * np.abs(target), atol)      # (nodes,)
-    ok = np.all(np.abs(dev) <= tol[None, :], axis=1)   # (t,)
-    if not ok[-1]:
-        return float("inf")
-    # last violation -> settle at the next evaluated instant
-    bad = np.nonzero(~ok)[0]
-    if bad.size == 0:
-        return float(times[0])
-    last = bad[-1]
-    return float(times[min(last + 1, len(times) - 1)])
 
 
 def lti_transient(
@@ -255,47 +123,22 @@ def lti_transient(
     stability_tol: float = 1e-6,
 ) -> TransientResult:
     """Step-response settling analysis (supply steps 0 -> x_s at t=0)."""
-    ss = assemble_state_space(net, opamp, v_os=v_os, buffers=buffers)
-    lam = np.linalg.eigvals(ss.m)
-    max_re = float(np.max(np.real(lam)))
-    # scale-aware stability test: compare to the fastest decay rate
-    rate_scale = float(np.max(np.abs(np.real(lam)))) or 1.0
-    stable = max_re < stability_tol * rate_scale
-
-    decays = -np.real(lam[np.real(lam) < 0])
-    dominant_tau = float(1.0 / decays.min()) if decays.size else float("inf")
-
-    if not stable:
-        n = net.n_unknowns
-        return TransientResult(
-            stable=False,
-            settle_time=float("inf"),
-            x_converged=np.full(n, np.nan),
-            max_re_eig=max_re,
-            dominant_tau=dominant_tau,
-            mirror_residual=float("nan"),
-        )
-
-    times = np.logspace(np.log10(t_min), np.log10(t_max), n_times)
-    z_star, dev = _modal_response(ss, times)
-    v_star = z_star[: ss.n_nodes]
-    t_settle = settling_time(
-        dev[:, : ss.n_unknowns],
-        times,
-        v_star[: ss.n_unknowns],
-        rtol=net.params.settle_rtol,
-        atol=net.params.settle_atol,
+    batch = engine.transient_batch(
+        [net],
+        opamp,
+        v_os=None if v_os is None else [v_os],
+        buffers=buffers,
+        t_max=t_max,
+        t_min=t_min,
+        n_times=n_times,
+        stability_tol=stability_tol,
+        method="eig",
     )
-    x = v_star[: ss.n_unknowns]
-    if net.n_nodes == 2 * net.n_unknowns:
-        mirror = float(np.max(np.abs(x + v_star[net.n_unknowns :])))
-    else:
-        mirror = 0.0
     return TransientResult(
-        stable=True,
-        settle_time=t_settle,
-        x_converged=x,
-        max_re_eig=max_re,
-        dominant_tau=dominant_tau,
-        mirror_residual=mirror,
+        stable=bool(batch.stable[0]),
+        settle_time=float(batch.settle_time[0]),
+        x_converged=batch.x_converged[0],
+        max_re_eig=float(batch.max_re_eig[0]),
+        dominant_tau=float(batch.dominant_tau[0]),
+        mirror_residual=float(batch.mirror_residual[0]),
     )

@@ -8,7 +8,10 @@ vector *is* an MXU matmul.  Three kernels:
   (the analog array's physics, I = G V), MXU-tiled.
 * :mod:`repro.kernels.transient_step`   — fused transient integration
   step ``z' = z + dt (M z + c)``: matmul + state update without an HBM
-  round-trip between them.
+  round-trip between them.  Batch-aware variants take per-system
+  operators ``(B, n, n)`` and fuse the settling-check reduction
+  ``max_i |M z + c|`` into the step; the multi-step sweep keeps the
+  whole operator VMEM-resident so the physics iterates on-chip.
 * :mod:`repro.kernels.spd_transform`    — the 2n transform's O(n^2)
   digital cost (column |A| sums, Eqs. 21-22) fused with the K_A/K_B
   assembly (Eqs. 15-16).
@@ -21,5 +24,7 @@ oracles every kernel is tested against.
 from repro.kernels.ops import (
     crosspoint_mvm,
     transient_step,
+    transient_step_batched,
+    transient_sweep,
     spd_transform_arrays,
 )

@@ -11,6 +11,7 @@ Responsibilities:
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +82,90 @@ def transient_step(
     out = _st.transient_step_pallas(mp, zp, cp, dt, block=block, interpret=interpret)
     out = out[:n, : z.shape[1]]
     return out[:, 0] if squeeze else out
+
+
+def transient_step_batched(
+    m: jnp.ndarray,
+    z: jnp.ndarray,
+    c: jnp.ndarray,
+    dt: float = 1.0,
+    *,
+    block: tuple[int, int] = _st.DEFAULT_BATCHED_BLOCK,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched fused Euler step: m (B, n, n), z/c (B, n).
+
+    Returns ``(z', res)`` with ``res`` the per-system fused
+    settling-check reduction ``max_i |M z + c|_i``.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    bsz, n, _ = m.shape
+    bm, bk = block
+    mult = math.lcm(bm, bk)
+    size = n + (-n) % mult
+    mp = _pad_to(m, (1, size, size))
+    zp = _pad_to(z, (1, size))
+    cp = _pad_to(c, (1, size))
+    out, res = _st.transient_step_batched_pallas(
+        mp, zp, cp, dt, block=block, interpret=interpret
+    )
+    return out[:, :n], jnp.max(res, axis=1)
+
+
+# fused-sweep VMEM budget: (n^2 + 3n) f32 per system must fit on-chip
+SWEEP_STATE_LIMIT = 1792
+
+
+def transient_sweep(
+    m: jnp.ndarray,
+    z: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    n_steps: int,
+    dt: float = 1.0,
+    interpret: bool | None = None,
+    m_transposed: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``n_steps`` fused batched Euler steps; m (B, n, n), z/c (B, n).
+
+    Uses the VMEM-resident sweep kernel while the per-system operator
+    fits on-chip, else falls back to ``n_steps`` launches of the tiled
+    batched step kernel.  Returns ``(z', res)`` with the per-system
+    residual ``max_i |M z' + c|_i`` evaluated at the final state.
+
+    ``m_transposed=True`` asserts the caller already block-padded every
+    operand and passed ``m[b] = M_b.T`` — the loop-hoisted fast path for
+    sweeps that launch many chunks over the same operator batch.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    bsz, n, _ = m.shape
+    if m_transposed:
+        out, res = _st.transient_sweep_pallas(
+            m, z, c, n_steps=n_steps, dt=dt, interpret=interpret
+        )
+        return out, res[:, 0]
+    if n > SWEEP_STATE_LIMIT:
+        # pad once so the per-step wrapper's _pad_to is a no-op view
+        bm, bk = _st.DEFAULT_BATCHED_BLOCK
+        size = n + (-n) % math.lcm(bm, bk)
+        m = _pad_to(m, (1, size, size))
+        z = _pad_to(z, (1, size))
+        c = _pad_to(c, (1, size))
+        for _ in range(n_steps):
+            z, _ = transient_step_batched(m, z, c, dt, interpret=interpret)
+        # dt=0 step: state unchanged, residual evaluated at the *final*
+        # state — matching the fused kernel's contract
+        _zf, res = transient_step_batched(m, z, c, 0.0, interpret=interpret)
+        return z[:, :n], res
+    size = n + (-n) % 128
+    mp = _pad_to(m, (1, size, size))
+    zp = _pad_to(z, (1, size))
+    cp = _pad_to(c, (1, size))
+    out, res = _st.transient_sweep_pallas(
+        mp.transpose(0, 2, 1), zp, cp, n_steps=n_steps, dt=dt,
+        interpret=interpret,
+    )
+    return out[:, :n], res[:, 0]
 
 
 def spd_transform_arrays(

@@ -19,6 +19,32 @@ def transient_step_ref(
     return out.astype(z.dtype)
 
 
+def transient_step_batched_ref(
+    m: jnp.ndarray, z: jnp.ndarray, c: jnp.ndarray, dt: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-system step + fused residual: m (B,n,n), z/c (B,n)."""
+    dz = (
+        jnp.einsum("bij,bj->bi", m.astype(jnp.float32), z.astype(jnp.float32))
+        + c.astype(jnp.float32)
+    )
+    out = (z.astype(jnp.float32) + dt * dz).astype(z.dtype)
+    return out, jnp.max(jnp.abs(dz), axis=1)
+
+
+def transient_sweep_ref(
+    m: jnp.ndarray, z: jnp.ndarray, c: jnp.ndarray, *, n_steps: int,
+    dt: float = 1.0
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """n_steps batched Euler steps + final residual (f32 throughout)."""
+    z32 = z.astype(jnp.float32)
+    m32 = m.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    for _ in range(n_steps):
+        z32 = z32 + dt * (jnp.einsum("bij,bj->bi", m32, z32) + c32)
+    dz = jnp.einsum("bij,bj->bi", m32, z32) + c32
+    return z32.astype(z.dtype), jnp.max(jnp.abs(dz), axis=1)
+
+
 def colabs_ref(a: jnp.ndarray) -> jnp.ndarray:
     """(1, n) column absolute sums, f32."""
     return jnp.sum(jnp.abs(a.astype(jnp.float32)), axis=0, keepdims=True)

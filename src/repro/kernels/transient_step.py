@@ -15,6 +15,26 @@ Grid: (m_blocks, n_blocks, k_blocks), k innermost (revisiting-output).
 The Z operand is passed twice — once indexed by the contraction block
 (kk) for the matmul, once by the row block (i) for the update — so
 both views stream through VMEM with no gather.
+
+Batched variants (one state vector per system, per-system operator):
+
+* :func:`transient_step_batched_pallas` — one step for a batch
+  ``Z'_b = Z_b + dt (M_b Z_b + C_b)`` with a *fused settling-check
+  reduction*: alongside the updated states it emits the per-system
+  ``max_i |M_b z_b + c_b|_i`` partials (the steady-state residual; zero
+  exactly at the operating point), so the driving sweep can test
+  convergence without a second pass over M.
+* :func:`transient_sweep_pallas` — ``n_steps`` fused steps with the
+  whole per-system operator VMEM-resident (grid over the batch only):
+  the physics iterates on-chip and M crosses HBM once per *chunk*
+  instead of once per step.  Usable while ``(n^2 + 3n) * 4`` bytes fit
+  in VMEM; the engine falls back to the tiled per-step kernel beyond.
+
+Both read M row-major; the per-step MVM uses a VPU row reduction (the
+op is memory-bound at ~2 flops/byte, so the reduction — not the MXU —
+is the roofline-appropriate unit).  Callers go through the auto-padding
+wrappers in :mod:`repro.kernels.ops`; the raw kernels assert
+block-multiple shapes.
 """
 
 from __future__ import annotations
@@ -80,3 +100,143 @@ def transient_step_pallas(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(m, z, z, c)
+
+
+# ---------------------------------------------------------------------------
+# Batched step (per-system operators) with fused settling-check reduction
+# ---------------------------------------------------------------------------
+
+DEFAULT_BATCHED_BLOCK = (128, 128)
+
+
+def _step_batched_kernel(
+    m_ref, zk_ref, zi_ref, c_ref, out_ref, res_ref, acc_ref,
+    *, n_k_blocks: int, dt: float
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # row reduction: acc[0, i] += sum_k M[b, i, k] z[b, k]
+    m = m_ref[0].astype(jnp.float32)                  # (bm, bk)
+    zk = zk_ref[...].astype(jnp.float32)              # (1, bk)
+    acc_ref[...] += jnp.sum(m * zk, axis=1)[None, :]
+
+    @pl.when(k == n_k_blocks - 1)
+    def _update():
+        dz = acc_ref[...] + c_ref[...].astype(jnp.float32)
+        z = zi_ref[...].astype(jnp.float32)
+        out_ref[...] = (z + dt * dz).astype(out_ref.dtype)
+        res_ref[...] = jnp.max(jnp.abs(dz)).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "block", "interpret"))
+def transient_step_batched_pallas(
+    m: jnp.ndarray,
+    z: jnp.ndarray,
+    c: jnp.ndarray,
+    dt: float,
+    *,
+    block: tuple[int, int] = DEFAULT_BATCHED_BLOCK,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused Euler step per system: m (B, n, n), z/c (B, n).
+
+    Returns ``(z', res)`` where ``res[b, i_block]`` holds the block-max
+    of ``|M_b z_b + c_b|`` — reduce over axis 1 for the per-system
+    settling check.
+    """
+    bsz, n, n2 = m.shape
+    assert n == n2 and z.shape == (bsz, n) and c.shape == z.shape, (
+        m.shape, z.shape, c.shape)
+    bm, bk = block
+    assert n % bm == 0 and n % bk == 0, (m.shape, block)
+    n_k_blocks = n // bk
+
+    return pl.pallas_call(
+        functools.partial(
+            _step_batched_kernel, n_k_blocks=n_k_blocks, dt=float(dt)
+        ),
+        grid=(bsz, n // bm, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda b, i, kk: (b, i, kk)),   # M tile
+            pl.BlockSpec((1, bk), lambda b, i, kk: (b, kk)),          # Z (matmul)
+            pl.BlockSpec((1, bm), lambda b, i, kk: (b, i)),           # Z (update)
+            pl.BlockSpec((1, bm), lambda b, i, kk: (b, i)),           # C tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda b, i, kk: (b, i)),
+            pl.BlockSpec((1, 1), lambda b, i, kk: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, n), z.dtype),
+            jax.ShapeDtypeStruct((bsz, n // bm), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bm), jnp.float32)],
+        interpret=interpret,
+    )(m, z, z, c)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-step sweep: whole per-system operator VMEM-resident
+# ---------------------------------------------------------------------------
+
+
+def _sweep_kernel(mt_ref, z_ref, c_ref, out_ref, res_ref, *, n_steps: int, dt: float):
+    mt = mt_ref[0].astype(jnp.float32)                # (n, n), transposed M
+    c = c_ref[...].astype(jnp.float32)                # (1, n)
+
+    def body(_, zz):
+        dz = jnp.dot(zz, mt, preferred_element_type=jnp.float32) + c
+        return zz + dt * dz
+
+    z = jax.lax.fori_loop(
+        0, n_steps, body, z_ref[...].astype(jnp.float32)
+    )
+    dz = jnp.dot(z, mt, preferred_element_type=jnp.float32) + c
+    out_ref[...] = z.astype(out_ref.dtype)
+    res_ref[...] = jnp.max(jnp.abs(dz)).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "dt", "interpret"))
+def transient_sweep_pallas(
+    m_t: jnp.ndarray,
+    z: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    n_steps: int,
+    dt: float = 1.0,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``n_steps`` fused Euler steps per system, operator VMEM-resident.
+
+    ``m_t`` is the batch of *transposed* operators (``m_t[b] = M_b.T``)
+    so the in-kernel update is a plain row-vector matmul.  Returns
+    ``(z', res)`` with ``res[b, 0] = max_i |M_b z'_b + c_b|_i`` — the
+    fused settling-check reduction evaluated at the final state.
+    """
+    bsz, n, n2 = m_t.shape
+    assert n == n2 and z.shape == (bsz, n) and c.shape == z.shape, (
+        m_t.shape, z.shape, c.shape)
+    assert n % 128 == 0, m_t.shape
+
+    return pl.pallas_call(
+        functools.partial(_sweep_kernel, n_steps=int(n_steps), dt=float(dt)),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n), lambda b: (b, 0)),
+            pl.BlockSpec((1, n), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, n), z.dtype),
+            jax.ShapeDtypeStruct((bsz, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(m_t, z, c)

@@ -170,7 +170,7 @@ def refresh_preconditioner(state: dict, cfg: AnalogNewtonConfig) -> dict:
     """
     new_pinv = {}
 
-    cov_leaves = jax.tree.leaves_with_path(
+    cov_leaves = jax.tree_util.tree_leaves_with_path(
         state["cov"], is_leaf=lambda v: v is None)
     pinv_tree = state["pinv"]
 

@@ -1,0 +1,39 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+The tier-1 suite must collect and run on machines without ``hypothesis``
+installed (the container bakes in the JAX/Pallas toolchain only).  Test
+modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly:
+
+* with ``hypothesis`` present this is a pure re-export;
+* without it, ``@given(...)`` turns the test into a clean ``pytest.skip``
+  and the strategy namespace ``st`` accepts any strategy construction, so
+  module collection (and every non-property test in the module) proceeds.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on hypothesis-free CI
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: builds inert strategies."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed; property test skipped"
+        )(fn)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import solve
 from repro.core.baselines import cg_solve, cholesky_solve, jacobi_solve
