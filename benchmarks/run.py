@@ -6,8 +6,16 @@ paper-scale sweeps (slow); the default is a reduced CPU-friendly pass.
 The figure sweeps run on the batched engine (``repro.core.engine``):
 each size/parameter class is one batched operating-point call (vmapped
 x64 solve) plus one batched settling call (stacked-eig modal path, or
-the Pallas forward-Euler sweep for ``tpu_complexity``), instead of
+the matrix-free ELL sweep for ``tpu_complexity``), instead of
 per-system Python loops.
+
+Unfiltered invocations (no ``--only``; force with ``--pr2`` / suppress
+with ``--no-pr2``) also write a machine-readable perf trajectory to
+``BENCH_pr2.json`` (``--json`` to relocate): wall-clock per phase, the
+sparse n/B sweep points (n up to 2048 on the ELL path — sizes the
+dense operators cannot reach), the dense-vs-ELL speedup at the largest
+dense-feasible size, and the parity-guard verdict.  Future PRs regress
+against this file.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
 """
@@ -15,8 +23,28 @@ per-system Python loops.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+BENCH_SCHEMA = "bench_pr2.v1"
+
+
+def _pr2_trajectory(full: bool) -> dict:
+    """The PR-2 perf baseline: matrix-free sweep points + speedup."""
+    from benchmarks.tpu_complexity import dense_vs_ell, parity_check, sparse_sweep
+
+    out: dict = {}
+    t0 = time.time()
+    out["sparse_sweep"] = sparse_sweep(full=full)
+    out["sparse_sweep_wall_s"] = time.time() - t0
+    t0 = time.time()
+    out["dense_vs_ell"] = dense_vs_ell()
+    out["dense_vs_ell_wall_s"] = time.time() - t0
+    t0 = time.time()
+    out["parity_failures"] = parity_check(sizes=(16,), max_steps=20_000)
+    out["parity_wall_s"] = time.time() - t0
+    return out
 
 
 def main() -> None:
@@ -24,6 +52,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma-separated subset, e.g. fig12,fig13")
+    ap.add_argument("--json", default="BENCH_pr2.json",
+                    help="perf-baseline output path ('' to skip)")
+    ap.add_argument("--pr2", default=None, action=argparse.BooleanOptionalAction,
+                    help="run the PR-2 perf trajectory (sparse n-sweep, "
+                         "dense-vs-ELL, parity); default: only on "
+                         "unfiltered runs")
     args = ap.parse_args()
 
     from benchmarks.common import emit
@@ -31,6 +65,7 @@ def main() -> None:
 
     only = set(filter(None, args.only.split(",")))
     t0 = time.time()
+    phases: dict[str, float] = {}
     print("name,metric,value")
     for key, fn in ALL.items():
         if only and key not in only:
@@ -42,7 +77,31 @@ def main() -> None:
             print(f"{key},ERROR,{e!r}", file=sys.stderr)
             raise
         emit(rows)
-        print(f"{key},wall_s,{time.time() - t:.1f}")
+        phases[key] = time.time() - t
+        print(f"{key},wall_s,{phases[key]:.1f}")
+
+    want_pr2 = args.pr2 if args.pr2 is not None else not only
+    if want_pr2:
+        import jax
+
+        doc = {
+            "schema": BENCH_SCHEMA,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "full": bool(args.full),
+            "phases_wall_s": phases,
+            **_pr2_trajectory(args.full),
+        }
+        doc["total_wall_s"] = time.time() - t0
+        if args.json:
+            with open(args.json, "w") as fh:
+                json.dump(doc, fh, indent=2, sort_keys=True)
+            print(f"bench_json,path,{args.json}")
+        # the drift gate fails the run whether or not the baseline
+        # file was written
+        if doc["parity_failures"]:
+            print("bench_json,parity,FAIL", file=sys.stderr)
+            raise SystemExit(1)
     print(f"total,wall_s,{time.time() - t0:.1f}")
 
 

@@ -124,6 +124,8 @@ def solve_batch(
     compute_settling: bool = False,
     settle_method: str = "auto",
     settle_max_steps: int = 200_000,
+    settle_dt_policy: str = "diag",
+    settle_matrix_free: bool = False,
     x_ref: np.ndarray | None = None,
 ) -> BatchSolveResult:
     """Solve a batch of SPD systems ``A[k] x[k] = b[k]``.
@@ -131,8 +133,18 @@ def solve_batch(
     ``a`` is (B, n, n), ``b`` (B, n); all systems share one circuit
     design, so assembly, DC solve and settling run as single batched
     device calls.  ``settle_method`` selects the transient path
-    ("eig" — exact modal; "euler" — Pallas forward-Euler sweep;
-    "auto" — by state count).
+    ("eig" — exact modal, the small-nz reference; "euler" — Pallas
+    forward-Euler sweep; "spectral" — power-iteration/Lanczos settling
+    *estimate*, no integration; "auto" — by state count).
+    ``settle_dt_policy`` picks the euler step rule ("diag" |
+    "spectral" — the power-iteration bound).
+
+    ``settle_matrix_free=True`` opts the euler path into the ELL
+    engine: assembly and sweep run device-resident with no
+    ``(B, nz, nz)`` build, settling against ``x_ref`` (required)
+    instead of the circuit's DC fixed point — semantics the default
+    preserves for existing callers — and ``mirror_residual`` is NaN
+    (there is no DC state to read the mirror nodes from).
     """
     a = np.asarray(a, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
@@ -172,9 +184,21 @@ def solve_batch(
         info=info,
     )
     if compute_settling:
+        if settle_matrix_free and x_ref is None:
+            raise ValueError("settle_matrix_free requires x_ref")
+        # x_ref reaches the transient engine only on explicit opt-in
+        # (or for the estimator-only spectral path, where it merely
+        # fills x_converged): the default euler/auto path keeps its
+        # settle-against-DC-fixed-point semantics
+        settle_ref = (
+            x_ref if (settle_matrix_free or settle_method == "spectral")
+            else None
+        )
         tr = engine.transient_batch(
             nets, spec, method=settle_method, pattern=pattern,
             max_steps=settle_max_steps,
+            x_ref=settle_ref,
+            dt_policy=settle_dt_policy,
         )
         result.settle_time = tr.settle_time
         result.stable = result.stable & tr.stable

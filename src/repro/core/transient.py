@@ -29,12 +29,17 @@ structure-of-arrays stamps.  ``assemble_state_space`` /
 ``lti_transient`` here are thin B=1 wrappers, so the single and batched
 paths are the same physics by construction.
 
-Two solution paths:
+Solution paths:
 
 * :func:`lti_transient` — exact modal solution via dense eigen-
   decomposition; settling time read off the modal response on a log
   time grid (replaces the paper's LTspice ``.tran`` runs for the
-  1200-system complexity studies).
+  1200-system complexity studies).  This is the small-``nz``
+  reference; at scale the engine offers the matrix-free forward-Euler
+  sweep over device-resident ELL operators
+  (``engine.transient_batch(method="euler", x_ref=...)``) and the
+  power-iteration/Lanczos settling estimate
+  (``method="spectral"``, :mod:`repro.core.spectral`).
 * :mod:`repro.core.transient_nl` — nonlinear ``lax.scan`` integration
   with slew-rate limiting and rail saturation; reproduces the
   instability signature (amp saturation) on non-PD systems (Fig. 8).

@@ -1,0 +1,168 @@
+"""Matrix-free ELL-format transient sweep kernels.
+
+The circuit operator ``M`` of :mod:`repro.core.engine` is inherently
+sparse: only the ``n`` node rows carry the branch network of the system
+matrix, while every buffer/amp row holds at most four stamps.  The
+batched engine therefore stores ``M`` in ELL (padded sparse-row) form —
+per row, a fixed-width list of ``(column, weight)`` slots:
+
+    dz[i] = sum_k  w[i, k] * z[idx[i, k]]          (+ c[i])
+
+Unused slots carry ``(idx=0, w=0)`` and are exact no-ops, so the same
+gathered row reduction serves every row type.  Per step the kernel
+touches ``nz * K`` weights instead of ``nz^2`` — for the proposed
+design (``nz ~ 8n``, amp rows bounded) that is an ~8x traffic reduction
+even for a dense system matrix and orders of magnitude for sparse ones.
+
+Two variants, mirroring :mod:`repro.kernels.transient_step`:
+
+* :func:`ell_sweep_pallas` — ``n_steps`` fused forward-Euler steps with
+  the whole per-system ELL operator VMEM-resident (grid over the batch
+  only) and the same fused ``max |M z + c|`` settling-check reduction as
+  the dense sweep, evaluated at the final state.
+* :func:`ell_step_pallas` — one row-tiled step for operators whose ELL
+  arrays exceed VMEM: the state vector (``nz`` floats — tiny) stays
+  whole per program so the gather never crosses tiles, while ``idx``/
+  ``w`` stream through VMEM in row blocks.
+
+Both use a VPU row reduction over the slot axis (the op is a gather
+plus an FMA per slot — there is no MXU shape here) and read the slot
+arrays row-major.  Callers go through the auto-padding wrappers in
+:mod:`repro.kernels.ops`; the raw kernels assert pre-padded shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_ROW_BLOCK = 128
+
+
+def _ell_residual(z_row, idx, w, c):
+    """Gathered row reduction: ``(M z + c)`` for one system.
+
+    z_row: (nz,) f32; idx: (nz, K) int32; w: (nz, K) f32; c: (1, nz).
+    """
+    gathered = jnp.take(z_row, idx, axis=0)            # (nz, K)
+    return jnp.sum(w * gathered, axis=1)[None, :] + c  # (1, nz)
+
+
+def _ell_sweep_kernel(idx_ref, w_ref, z_ref, c_ref, out_ref, res_ref,
+                      *, n_steps: int, dt: float):
+    idx = idx_ref[0]                                   # (nz, K)
+    w = w_ref[0].astype(jnp.float32)                   # (nz, K)
+    c = c_ref[...].astype(jnp.float32)                 # (1, nz)
+
+    def body(_, zz):
+        return zz + dt * _ell_residual(zz[0], idx, w, c)
+
+    z = jax.lax.fori_loop(0, n_steps, body, z_ref[...].astype(jnp.float32))
+    dz = _ell_residual(z[0], idx, w, c)
+    out_ref[...] = z.astype(out_ref.dtype)
+    res_ref[...] = jnp.max(jnp.abs(dz)).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "dt", "interpret"))
+def ell_sweep_pallas(
+    idx: jnp.ndarray,
+    w: jnp.ndarray,
+    z: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    n_steps: int,
+    dt: float = 1.0,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``n_steps`` fused Euler steps per system, ELL operator VMEM-resident.
+
+    ``idx``/``w`` are ``(B, nz, K)`` ELL slot arrays, ``z``/``c``
+    ``(B, nz)``.  Returns ``(z', res)`` with
+    ``res[b, 0] = max_i |M_b z'_b + c_b|_i`` — the fused settling-check
+    reduction evaluated at the final state (matching the dense sweep's
+    contract).
+    """
+    bsz, nz, k = idx.shape
+    assert w.shape == idx.shape and z.shape == (bsz, nz) and c.shape == z.shape, (
+        idx.shape, w.shape, z.shape, c.shape)
+    assert nz % 128 == 0, idx.shape
+
+    return pl.pallas_call(
+        functools.partial(_ell_sweep_kernel, n_steps=int(n_steps), dt=float(dt)),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, nz, k), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, nz, k), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, nz), lambda b: (b, 0)),
+            pl.BlockSpec((1, nz), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nz), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nz), z.dtype),
+            jax.ShapeDtypeStruct((bsz, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, w, z, c)
+
+
+def _ell_step_kernel(idx_ref, w_ref, zfull_ref, zi_ref, c_ref,
+                     out_ref, res_ref, *, dt: float):
+    idx = idx_ref[0]                                   # (bm, K)
+    w = w_ref[0].astype(jnp.float32)                   # (bm, K)
+    z = zfull_ref[0].astype(jnp.float32)               # (nz,) whole state
+    gathered = jnp.take(z, idx, axis=0)                # (bm, K)
+    dz = jnp.sum(w * gathered, axis=1)[None, :] + c_ref[...].astype(jnp.float32)
+    out_ref[...] = (zi_ref[...].astype(jnp.float32) + dt * dz).astype(out_ref.dtype)
+    res_ref[...] = jnp.max(jnp.abs(dz)).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "block", "interpret"))
+def ell_step_pallas(
+    idx: jnp.ndarray,
+    w: jnp.ndarray,
+    z: jnp.ndarray,
+    c: jnp.ndarray,
+    dt: float = 1.0,
+    *,
+    block: int = DEFAULT_ROW_BLOCK,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One row-tiled ELL Euler step: idx/w (B, nz, K), z/c (B, nz).
+
+    Returns ``(z', res)`` where ``res[b, i_block]`` holds the block-max
+    of ``|M_b z_b + c_b|`` — reduce over axis 1 for the per-system
+    settling check.  Used when the whole ELL operator does not fit
+    VMEM; the state vector still does, so the gather stays local.
+    """
+    bsz, nz, k = idx.shape
+    assert w.shape == idx.shape and z.shape == (bsz, nz) and c.shape == z.shape, (
+        idx.shape, w.shape, z.shape, c.shape)
+    assert nz % block == 0, (idx.shape, block)
+
+    return pl.pallas_call(
+        functools.partial(_ell_step_kernel, dt=float(dt)),
+        grid=(bsz, nz // block),
+        in_specs=[
+            pl.BlockSpec((1, block, k), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block, k), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, nz), lambda b, i: (b, 0)),     # whole state
+            pl.BlockSpec((1, block), lambda b, i: (b, i)),  # state tile
+            pl.BlockSpec((1, block), lambda b, i: (b, i)),  # C tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda b, i: (b, i)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nz), z.dtype),
+            jax.ShapeDtypeStruct((bsz, nz // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, w, z, z, c)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import crosspoint_mvm as _mvm
+from repro.kernels import ell_transient as _ell
 from repro.kernels import spd_transform as _tr
 from repro.kernels import transient_step as _st
 
@@ -114,6 +115,84 @@ def transient_step_batched(
 
 # fused-sweep VMEM budget: (n^2 + 3n) f32 per system must fit on-chip
 SWEEP_STATE_LIMIT = 1792
+
+# ---------------------------------------------------------------------------
+# Dense <-> ELL crossover model
+# ---------------------------------------------------------------------------
+#
+# Per Euler step the dense sweep reads nz^2 f32 weights; the ELL sweep
+# reads nz*K (weight, index) pairs — 2x the bytes per slot.  ELL
+# therefore wins on traffic whenever the ELL width K is below
+# ELL_FILL_CUTOFF * nz, and it additionally removes the O(B nz^2) host
+# assembly and transfer.  The fused ELL sweep needs the whole slot
+# array on-chip: ~ nz*K*8 + 3*nz*4 bytes per system must fit the VMEM
+# budget, else the row-tiled per-step kernel takes over (state vector
+# whole, slots streamed).
+ELL_FILL_CUTOFF = 0.5
+ELL_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def ell_sweep_fits_vmem(nz: int, k: int) -> bool:
+    """Whether one system's padded ELL operator is VMEM-resident."""
+    nz_p = nz + (-nz) % 128
+    return (nz_p * k * 8 + 3 * nz_p * 4) <= ELL_VMEM_BUDGET
+
+
+def sweep_backend(nz: int, k: int | None) -> str:
+    """Pick the transient-sweep backend for an operator family.
+
+    ``k`` is the ELL slot width (None for a dense-only caller).
+    Returns ``"ell"`` (fused ELL sweep), ``"ell-step"`` (row-tiled ELL,
+    operator exceeds VMEM), ``"dense"`` (fused dense sweep) or
+    ``"dense-step"`` (tiled dense per-step kernel).
+    """
+    if k is not None and k < ELL_FILL_CUTOFF * nz:
+        return "ell" if ell_sweep_fits_vmem(nz, k) else "ell-step"
+    return "dense" if nz <= SWEEP_STATE_LIMIT else "dense-step"
+
+
+def ell_transient_sweep(
+    idx: jnp.ndarray,
+    w: jnp.ndarray,
+    z: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    n_steps: int,
+    dt: float = 1.0,
+    interpret: bool | None = None,
+    padded: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``n_steps`` fused ELL Euler steps; idx/w (B, nz, K), z/c (B, nz).
+
+    Pads ``nz`` to the row-block multiple (padded rows carry ``w = 0``
+    slots pointing at column 0 — exact no-ops) and dispatches between
+    the VMEM-resident fused sweep and the row-tiled per-step kernel by
+    the :func:`ell_sweep_fits_vmem` budget.  Returns ``(z', res)`` with
+    the per-system residual ``max_i |M z' + c|_i`` at the final state.
+
+    ``padded=True`` asserts the caller already block-padded every
+    operand — the loop-hoisted fast path for settling sweeps that
+    launch many chunks over the same operator batch.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    bsz, nz, k = idx.shape
+    if not padded:
+        size = nz + (-nz) % 128
+        idx = _pad_to(idx, (1, size, 1))
+        w = _pad_to(w, (1, size, 1))
+        z = _pad_to(z, (1, size))
+        c = _pad_to(c, (1, size))
+    if ell_sweep_fits_vmem(nz, k):
+        out, res = _ell.ell_sweep_pallas(
+            idx, w, z, c, n_steps=n_steps, dt=dt, interpret=interpret
+        )
+        return out[:, :nz], res[:, 0]
+    for _ in range(n_steps):
+        z, _ = _ell.ell_step_pallas(idx, w, z, c, dt, interpret=interpret)
+    # dt=0 step: state unchanged, residual evaluated at the *final*
+    # state — matching the fused kernel's contract
+    _zf, res = _ell.ell_step_pallas(idx, w, z, c, 0.0, interpret=interpret)
+    return z[:, :nz], jnp.max(res, axis=1)
 
 
 def transient_sweep(

@@ -45,6 +45,32 @@ def transient_sweep_ref(
     return z32.astype(z.dtype), jnp.max(jnp.abs(dz), axis=1)
 
 
+def ell_spmv_ref(
+    idx: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray
+) -> jnp.ndarray:
+    """Batched ELL matvec ``(M z)[b, i] = sum_k w[b,i,k] z[b, idx[b,i,k]]``.
+
+    Runs in the operand dtype (pass f64 arrays for the exact-parity
+    oracle against a dense ``einsum``).
+    """
+    gathered = jnp.take_along_axis(z[:, None, :], idx, axis=2)   # (B, nz, K)
+    return jnp.sum(w * gathered, axis=2)
+
+
+def ell_sweep_ref(
+    idx: jnp.ndarray, w: jnp.ndarray, z: jnp.ndarray, c: jnp.ndarray,
+    *, n_steps: int, dt: float = 1.0
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """n_steps batched ELL Euler steps + final residual (f32 throughout)."""
+    z32 = z.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    for _ in range(n_steps):
+        z32 = z32 + dt * (ell_spmv_ref(idx, w32, z32) + c32)
+    dz = ell_spmv_ref(idx, w32, z32) + c32
+    return z32.astype(z.dtype), jnp.max(jnp.abs(dz), axis=1)
+
+
 def colabs_ref(a: jnp.ndarray) -> jnp.ndarray:
     """(1, n) column absolute sums, f32."""
     return jnp.sum(jnp.abs(a.astype(jnp.float32)), axis=0, keepdims=True)

@@ -35,6 +35,33 @@ op is memory-bound at ~2 flops/byte, so the reduction — not the MXU —
 is the roofline-appropriate unit).  Callers go through the auto-padding
 wrappers in :mod:`repro.kernels.ops`; the raw kernels assert
 block-multiple shapes.
+
+Dense <-> ELL crossover
+-----------------------
+These dense kernels are one side of a backend switch
+(:func:`repro.kernels.ops.sweep_backend`); the other side is the
+matrix-free ELL sweep (:mod:`repro.kernels.ell_transient`).  The
+crossover model:
+
+* **traffic** — per step the dense sweep reads ``nz^2`` f32 weights;
+  the ELL sweep reads ``nz * K`` (f32 weight, i32 index) pairs, i.e.
+  ``2 K / nz`` of the dense bytes.  With the circuit's bounded amp
+  rows (<= 4 stamps) and node rows (1 + cells + branch degree), ``K``
+  is ~``deg(A) + 3``: even a *dense* system matrix gives ``K ~ n``
+  against ``nz ~ 8n`` — an ~8x reduction — and sparse systems scale as
+  their true degree.  The switch picks ELL whenever
+  ``K < ELL_FILL_CUTOFF * nz`` (cutoff 0.5 = the break-even of the
+  2-arrays-per-slot format).
+* **VMEM budget** — the fused dense sweep holds ``(nz^2 + 3 nz) * 4``
+  bytes per system on-chip (``SWEEP_STATE_LIMIT``); the fused ELL
+  sweep holds ``nz * K * 8 + 3 nz * 4`` (``ELL_VMEM_BUDGET``).  Each
+  side degrades to its per-step tiled kernel beyond its budget — but
+  the ELL budget is crossed ~``nz / 2K`` times later, which is what
+  lets the settling sweeps reach ``nz`` in the tens of thousands.
+* **gather cost** — the ELL row reduction pays one gather per slot; on
+  sparse systems the traffic win dominates, at fill ratios near the
+  cutoff the dense MXU/VPU stream wins, which is why the switch is by
+  fill ratio rather than "always ELL".
 """
 
 from __future__ import annotations

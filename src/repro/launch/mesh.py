@@ -5,11 +5,39 @@ module never touches JAX device state.  The dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; the single-pod mesh then uses the first 256 of the 512
 placeholder devices, the multi-pod mesh all 512.
+
+Version shims: the pinned accelerator toolchain (jax 0.4.37) predates
+``jax.sharding.AxisType`` / the ``axis_types`` argument of
+``jax.make_mesh`` and ``jax.set_mesh``.  :func:`_make_mesh` and
+:func:`mesh_context` feature-detect both so the same call sites run on
+either API generation (auto-mode axes are the 0.4.x default anyway, so
+omitting ``axis_types`` there is behavior-identical).
 """
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def _make_mesh(shape, axes, devices):
+    """``jax.make_mesh`` with explicit Auto axis types when supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types, devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def mesh_context(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` on new JAX,
+    the ``Mesh`` object's own context manager on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    # jax.sharding.Mesh is itself a context manager on 0.4.x
+    return contextlib.nullcontext(mesh) if mesh is None else mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,8 +53,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
             "device_count=512 before importing jax"
         )
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types, devices=devices)
+    return _make_mesh(shape, axes, devices)
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
@@ -34,5 +61,4 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     n = 1
     for s in shape:
         n *= s
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types, devices=jax.devices()[:n])
+    return _make_mesh(shape, axes, jax.devices()[:n])

@@ -97,7 +97,7 @@ _SUBPROCESS_PROG = textwrap.dedent("""
     from repro.configs import get_smoke_config
     from repro.distributed.rules import make_rules, adjust_batch_rule
     from repro.distributed.sharding import use_rules, param_specs
-    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.mesh import make_debug_mesh, mesh_context
     from repro.models.model import init_params, param_logical_axes
     from repro.optim.adamw import adamw
     from repro.training.step import init_train_state, make_train_step
@@ -109,7 +109,16 @@ _SUBPROCESS_PROG = textwrap.dedent("""
     rules = {**make_rules(cfg, model_axis=4), "batch": "data"}
     # smoke dims: 4 heads % 4 == 0 -> heads mode on the debug mesh
     opt = adamw(1e-3)
-    with jax.set_mesh(mesh), use_rules(rules):
+
+    # jax 0.4.x jit only accepts Sharding objects in in_shardings;
+    # wrap the PartitionSpec trees in NamedSharding (works on both
+    # API generations).  P is a tuple subclass -> needs is_leaf.
+    from jax.sharding import NamedSharding as NS
+    def shard_tree(tree, m):
+        return jax.tree.map(lambda s: NS(m, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    with mesh_context(mesh), use_rules(rules):
         state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
         p_specs = param_specs(param_logical_axes(cfg), rules)
         specs = {
@@ -117,6 +126,7 @@ _SUBPROCESS_PROG = textwrap.dedent("""
             "opt_state": {"mu": p_specs, "nu": p_specs, "step": P()},
             "step": P(),
         }
+        specs = shard_tree(specs, mesh)
         # place concrete arrays on the mesh per the specs (jit
         # in_shardings must match committed array shardings)
         la = param_logical_axes(cfg)
@@ -129,10 +139,11 @@ _SUBPROCESS_PROG = textwrap.dedent("""
             },
             "step": state["step"],
         }
+        batch_specs = shard_tree({"tokens": P("data", None),
+                                  "targets": P("data", None)}, mesh)
         step = jax.jit(make_train_step(cfg, opt),
-                       in_shardings=(specs, {"tokens": P("data", None),
-                                             "targets": P("data", None)}),
-                       out_shardings=(specs, P()))
+                       in_shardings=(specs, batch_specs),
+                       out_shardings=(specs, NS(mesh, P())))
         from jax.sharding import NamedSharding
         toks = jax.device_put(
             jnp.zeros((4, 32), jnp.int32) + 3,
@@ -148,7 +159,7 @@ _SUBPROCESS_PROG = textwrap.dedent("""
         assert plan.n_devices <= 4
         mesh2 = make_debug_mesh((2, 2), ("data", "model"))
         rules2 = {**make_rules(cfg, model_axis=2), "batch": "data"}
-    with jax.set_mesh(mesh2), use_rules(rules2):
+    with mesh_context(mesh2), use_rules(rules2):
         from jax.sharding import NamedSharding as NS
         rep2 = NS(mesh2, P())
         state2 = {
