@@ -26,22 +26,37 @@ Sub-benchmarks (all emitted by ``run`` / recorded in ``BENCH_pr2.json``
 by ``benchmarks.run``):
 
   * :func:`run`            — the conductance-matched step-count sweep.
-  * :func:`sparse_sweep`   — n into the thousands at fixed row degree.
+  * :func:`sparse_sweep`   — n into the thousands at fixed row degree,
+                             with the spectral settling *prediction*
+                             (deflated rightmost-mode estimate,
+                             :mod:`repro.core.spectral`) recorded next
+                             to the measured sweep steps at every size:
+                             the predicted-vs-measured curve is the
+                             end-to-end validation of the paper's
+                             eigenvalue-governed settling law.
   * :func:`dense_vs_ell`   — wall-clock speedup at the largest size the
                              dense fused sweep still handles.
   * :func:`parity_check`   — CI guard: dense and ELL paths must agree
                              (assembly to f64 round-off, identical step
                              counts, f32-level states); exits non-zero
                              on drift.
+  * :func:`settling_accuracy` — CI guard: the spectral slow-mode
+                             estimate must stay within [0.5, 2.0]x of
+                             the exact-eig reference on the small-nz
+                             reference set (both designs, non-SDD SPD
+                             included); exits non-zero outside the
+                             band.
 
     PYTHONPATH=src:. python -m benchmarks.tpu_complexity [--full]
     PYTHONPATH=src:. python -m benchmarks.tpu_complexity --parity
+    PYTHONPATH=src:. python -m benchmarks.tpu_complexity --settling
 """
 
 from __future__ import annotations
 
 import sys
 import time
+import zlib
 
 import numpy as np
 
@@ -129,6 +144,8 @@ def sparse_sweep(
     if sizes is None:
         sizes = (128, 256, 512, 1024, 2048) if not full else (
             128, 256, 512, 1024, 2048, 4096)
+    from repro.core import spectral
+
     rows = []
     for n in sizes:
         nets, x, density = _sparse_systems(rng, n, count)
@@ -137,13 +154,27 @@ def sparse_sweep(
         ell.weights.block_until_ready()
         t_assemble = time.perf_counter() - t0
         nz, k = ell.n_states, ell.ell_width
+        # the estimator's prediction, before (and independent of) the
+        # measured integration: steps = ceil(t_settle / dt) at the
+        # sweep's dt rule
         t0 = time.perf_counter()
-        steps, _xf, res, _dt = engine.euler_settle_batch(
+        sb = spectral.spectral_bounds(ell)
+        t_spectral = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        steps, _xf, res, dt = engine.euler_settle_batch(
             ell, x, max_steps=max_steps, check_every=check_every,
             interpret=interpret,
         )
         t_sweep = time.perf_counter() - t0
         s = stats(list(steps))
+        # compare in time units (the sweep's dt_policy="diag" step
+        # differs from the spectral dt): measured settle time vs the
+        # slow-mode prediction ln(1/rtol)/|Re lambda_slow|
+        measured_t = np.where(steps < max_steps, steps * dt, np.nan)
+        pred_t = np.where(np.isfinite(sb.settle_time), sb.settle_time, np.nan)
+        with np.errstate(invalid="ignore"):
+            ratio = pred_t / measured_t
+        ratio = ratio[np.isfinite(ratio)]
         rows.append({
             "name": f"tpu_sparse_n{n}",
             "n": n,
@@ -156,11 +187,20 @@ def sparse_sweep(
             "steps_median": s["median"],
             "steps_p90": s["p90"],
             "settled": int(np.sum(steps < max_steps)),
+            "predicted_steps_median": float(np.median(sb.settle_steps)),
+            "predicted_settle_s_median": float(np.median(sb.settle_time)),
+            "measured_settle_s_median": float(np.nanmedian(measured_t)),
+            "pred_over_measured_median": (
+                float(np.median(ratio)) if ratio.size else float("nan")
+            ),
+            "slow_re_median": float(np.median(sb.slow_re)),
+            "certified": int(np.sum(sb.certified)),
             "bytes_per_step": nz * k * 8 + 3 * nz * 4,
             "dense_bytes_f64": float(count) * nz * nz * 8,
             "dense_feasible": count * nz * nz * 8 < 2e9,
             "residual_max": float(np.max(res)),
             "assemble_wall_s": t_assemble,
+            "spectral_wall_s": t_spectral,
             "sweep_wall_s": t_sweep,
         })
     return rows
@@ -276,6 +316,72 @@ def parity_check(
     return failures
 
 
+def settling_accuracy(
+    *,
+    ratio_lo: float = 0.5,
+    ratio_hi: float = 2.0,
+) -> list[str]:
+    """Spectral-vs-eig slow-mode guard (the CI settling-accuracy step).
+
+    Runs the spectral estimator and the exact stacked eigendecomposition
+    over the small-nz reference set — proposed and preliminary designs,
+    non-diagonally-dominant SPD and SDD systems — and returns failure
+    strings (empty == contract holds) whenever the slow-mode estimate
+    ``Re lambda_slow`` leaves ``[ratio_lo, ratio_hi]`` times the exact
+    rightmost eigenvalue, or an unstable system is not flagged.
+    """
+    from repro.core import spectral
+    from repro.core.network import build_preliminary
+    from repro.data.spd import (
+        random_rhs_from_solution,
+        random_sdd,
+        random_spd,
+    )
+
+    failures = []
+    cases = [
+        ("proposed", build_proposed, 14, 4, dict()),
+        ("proposed_sparse", build_proposed, 20, 3, dict(density=0.4)),
+        ("preliminary", build_preliminary, 12, 3, dict()),
+        ("sdd", build_proposed, 12, 3, dict(sdd=True)),
+        ("non_pd", build_proposed, 10, 3, dict(non_pd=True)),
+    ]
+    for label, builder, n, count, opts in cases:
+        rng = np.random.default_rng(zlib.crc32(label.encode()))
+        nets = []
+        for k in range(count):
+            density = opts.get("density", 1.0)
+            a = random_spd(rng, n, density=density)
+            if opts.get("non_pd") and k == count - 1:
+                a = -a
+            if opts.get("sdd") and k == count - 1:
+                a = random_sdd(rng, n)
+            _x, b = random_rhs_from_solution(rng, a)
+            nets.append(builder(a, b))
+        dense = engine.assemble_batch(nets)
+        ell = engine.assemble_batch_ell(nets)
+        sb = spectral.spectral_bounds(ell)
+        lam = np.linalg.eigvals(dense.m)
+        abscissa = lam.real.max(axis=1)
+        for k in range(count):
+            if abscissa[k] >= 0:
+                if sb.slow_re[k] < 0:
+                    failures.append(
+                        f"{label}[{k}]: unstable system (abscissa "
+                        f"{abscissa[k]:.3e}) not flagged"
+                    )
+                continue
+            true_slow = lam[k].real[lam[k].real < 0].max()
+            ratio = sb.slow_re[k] / true_slow
+            if not (ratio_lo <= ratio <= ratio_hi):
+                failures.append(
+                    f"{label}[{k}]: slow-mode ratio {ratio:.3f} outside "
+                    f"[{ratio_lo}, {ratio_hi}] (est {sb.slow_re[k]:.4e} "
+                    f"vs exact {true_slow:.4e})"
+                )
+    return failures
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -283,12 +389,21 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--parity", action="store_true",
                     help="dense<->ELL drift guard; exit 1 on drift")
+    ap.add_argument("--settling", action="store_true",
+                    help="spectral-vs-eig slow-mode guard; exit 1 when "
+                         "the ratio leaves [0.5, 2.0]")
     args = ap.parse_args()
     if args.parity:
         fails = parity_check()
         for f in fails:
             print(f"PARITY DRIFT: {f}", file=sys.stderr)
         print(f"parity_check,failures,{len(fails)}")
+        raise SystemExit(1 if fails else 0)
+    if args.settling:
+        fails = settling_accuracy()
+        for f in fails:
+            print(f"SETTLING DRIFT: {f}", file=sys.stderr)
+        print(f"settling_accuracy,failures,{len(fails)}")
         raise SystemExit(1 if fails else 0)
     print("name,metric,value")
     emit(run(full=args.full))

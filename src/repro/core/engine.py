@@ -41,9 +41,12 @@ factors the physics into
   (``method="auto"`` picks by state count).  The sweep dispatches
   between the dense and the ELL-SpMV kernels by fill ratio and VMEM
   fit (:func:`repro.kernels.ops.sweep_backend`); ``method="spectral"``
-  replaces the O(nz^3) eig estimate with power-iteration/Lanczos
-  extreme-eigenvalue bounds (:mod:`repro.core.spectral`) that also
-  drive the euler ``dt`` selection (``dt_policy="spectral"``).
+  replaces the O(nz^3) eig estimate with the matrix-free spectral
+  estimator (:mod:`repro.core.spectral`: power-iteration rate, Krylov
+  Ritz modes for the abscissa-aware ``dt_policy="spectral"`` step
+  rule, and propagator-filtered deflated subspace iteration for the
+  slow mode + restricted numerical-range stability certificate), whose
+  predictions also size the euler sweep's chunk schedule.
 
 x64 policy: assembly and the exact paths run float64 end to end (the
 circuit spans 1e-12 F against 1e6 rad/s rates); only the Pallas Euler
@@ -658,6 +661,15 @@ class EllBatchedStateSpace:
         gathered = jnp.take_along_axis(z[:, None, :], self.indices, axis=2)
         return jnp.sum(self.weights * gathered, axis=2)
 
+    def matvec_block(self, z: jnp.ndarray) -> jnp.ndarray:
+        """Block matvec ``(B, k, nz) -> (B, k, nz)`` — one gathered row
+        reduction over the whole block (the spectral subspace iteration
+        runs on this instead of k sequential matvecs); delegates to the
+        canonical :func:`repro.core.spectral.ell_block_matvec`."""
+        from repro.core.spectral import ell_block_matvec
+
+        return ell_block_matvec(self.indices, self.weights, z)
+
     def matvec_t(self, z: jnp.ndarray) -> jnp.ndarray:
         """Batched ``M^T z`` (row-wise scatter-add)."""
         b, nz, k = self.indices.shape
@@ -1012,6 +1024,10 @@ class BatchTransientResult:
     dominant_tau: np.ndarray     # (B,)
     mirror_residual: np.ndarray  # (B,)
     method: str = "eig"
+    # spectral path only: converged rightmost Ritz pair with negative
+    # restricted numerical abscissa (see repro.core.spectral); None on
+    # the eig/euler paths
+    certified: np.ndarray | None = None
 
     def __len__(self) -> int:
         return self.stable.shape[0]
@@ -1087,21 +1103,21 @@ def _settle_dt(
     """Per-system forward-Euler step size.
 
     ``"diag"`` — the Gershgorin-flavoured ``dt_safety / max_i |M_ii|``
-    rule (cheap, conservative for diagonally dominated rows).
-    ``"spectral"`` — ``2 dt_safety / |lambda|_max`` from the batched
-    power-iteration estimate (:mod:`repro.core.spectral`): tighter when
-    the spectrum is well inside the Gershgorin bound, and still usable
-    when it is *outside* the diagonal estimate.  Both rules assume the
-    dominant modes are (close to) real-negative — true for the
-    circuit's relaxation dynamics; an underdamped pair with
-    ``|Im| >> |Re|`` would need ``dt < 2 |Re| / |lambda|^2``, which
-    neither rule sees (a divergent sweep is then reported as
-    unsettled, not as a wrong answer).
+    rule (cheap, conservative for diagonally dominated rows, but blind
+    to off-diagonal structure: it assumes near-real dominant modes).
+    ``"spectral"`` — the abscissa-aware rule
+    (:func:`repro.core.spectral.mode_dt_limit`): the margined modulus
+    bound ``2 dt_safety / |lambda|_max`` from power iteration, tightened
+    by the per-mode Euler-circle condition ``dt < 2 |Re| / |lambda|^2``
+    over the exterior Krylov Ritz modes — so it stays valid for
+    underdamped operators (``|Im| >> |Re|``), where both the diag rule
+    and a bare modulus rule would integrate divergently.
     """
     if dt_policy == "spectral":
         from repro.core import spectral
 
-        # rate-only configuration: dt needs |lambda|_max, nothing else
+        # dt-only configuration: rate + Krylov Ritz modes, no slow-mode
+        # extraction and no certificate
         return spectral.spectral_bounds(
             bss, dt_safety=dt_safety, slow_iters=0, lanczos_iters=0
         ).dt
@@ -1119,9 +1135,13 @@ def _settle_dt(
 def _settle_loop(step_chunk, z, dt, x_ref, *, rtol, atol, check_every, max_steps):
     """Shared chunked-sweep convergence loop (dense and ELL backends).
 
-    ``step_chunk(z) -> (z', res)`` advances ``check_every`` steps with
-    the dt-folded operator; ``res`` is the fused settling-check
-    reduction ``dt * max|M z' + c|``.
+    ``step_chunk(z, n) -> (z', res)`` advances ``n`` steps with the
+    dt-folded operator; ``res`` is the fused settling-check reduction
+    ``dt * max|M z' + c|``.  The final chunk is clamped so the sweep
+    never integrates past ``max_steps`` (the recorded step counts obey
+    ``steps <= max_steps``, with ``steps == max_steps`` meaning
+    *unsettled within budget* — required now that the chunk length can
+    be schedule-sized rather than a divisor of the budget).
     """
     b_count, nu = x_ref.shape
     tol = np.maximum(rtol * np.abs(x_ref), atol)            # (B, nu)
@@ -1130,8 +1150,9 @@ def _settle_loop(step_chunk, z, dt, x_ref, *, rtol, atol, check_every, max_steps
     res = np.zeros(b_count, dtype=np.float64)
     taken = 0
     while taken < max_steps:
-        z, r = step_chunk(z)
-        taken += check_every
+        chunk = min(check_every, max_steps - taken)
+        z, r = step_chunk(z, chunk)
+        taken += chunk
         x_now = np.asarray(z[:, :nu], dtype=np.float64)
         # dt was folded into the operator, so the kernel's reduction is
         # dt * max|M z + c|; undo the fold to report the true residual
@@ -1153,10 +1174,11 @@ def euler_settle_batch(
     rtol: float = 0.01,
     atol: float = 1e-4,
     dt_safety: float = 0.5,
-    check_every: int = 50,
+    check_every: int | None = None,
     max_steps: int = 200_000,
     interpret: bool | None = None,
     dt_policy: str = "diag",
+    bounds=None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Forward-Euler settling sweep through the Pallas kernels.
 
@@ -1166,6 +1188,15 @@ def euler_settle_batch(
     ``max_steps`` is hit.  The per-system step comes from
     :func:`_settle_dt` (``dt_policy``) and is folded into the operator
     so one kernel serves heterogeneous rates.
+
+    ``bounds`` (a precomputed :class:`repro.core.spectral.SpectralBounds`)
+    short-circuits the ``dt_policy="spectral"`` estimate and, when
+    ``check_every`` is left ``None``, sizes the sweep chunks from the
+    predicted settling step count
+    (:func:`repro.kernels.ops.sweep_chunk_schedule`) — long chunks
+    amortize kernel launches and host syncs over the predicted horizon
+    instead of polling every 50 steps.  Without a prediction,
+    ``check_every`` defaults to 50.
 
     A dense :class:`BatchedStateSpace` runs the dense sweep kernels.
     An :class:`EllBatchedStateSpace` runs the matrix-free ELL-SpMV
@@ -1183,6 +1214,7 @@ def euler_settle_batch(
         SWEEP_STATE_LIMIT,
         ell_transient_sweep,
         sweep_backend,
+        sweep_chunk_schedule,
         transient_sweep,
     )
 
@@ -1197,7 +1229,19 @@ def euler_settle_batch(
             # advantage here, and the dense kernels need no gather
             bss = bss.to_dense_bss()
 
-    dt = _settle_dt(bss, dt_safety, dt_policy)              # (B,)
+    if bounds is not None and dt_policy == "spectral":
+        # re-apply the caller's safety factor to the (factor-free)
+        # stability limit — a precomputed bounds must not pin dt to the
+        # dt_safety it happened to be computed with
+        dt = dt_safety * np.asarray(bounds.dt_limit)        # (B,)
+    else:
+        dt = _settle_dt(bss, dt_safety, dt_policy)          # (B,)
+    if check_every is None:
+        check_every = (
+            sweep_chunk_schedule(bounds.settle_steps, max_steps)
+            if bounds is not None
+            else 50
+        )
 
     if isinstance(bss, EllBatchedStateSpace):
         size = nz + (-nz) % 128
@@ -1212,9 +1256,9 @@ def euler_settle_batch(
         )
         z = jnp.zeros((b_count, size), dtype=jnp.float32)
 
-        def step_chunk(zz):
+        def step_chunk(zz, n):
             return ell_transient_sweep(
-                idx, wt, zz, ct, n_steps=check_every, interpret=interpret,
+                idx, wt, zz, ct, n_steps=n, interpret=interpret,
                 padded=True,
             )
 
@@ -1241,9 +1285,9 @@ def euler_settle_batch(
     mt_j = jnp.asarray(np.ascontiguousarray(mt))
     ct_j = jnp.asarray(ct)
 
-    def step_chunk(zz):
+    def step_chunk(zz, n):
         return transient_sweep(
-            mt_j, zz, ct_j, n_steps=check_every, interpret=interpret,
+            mt_j, zz, ct_j, n_steps=n, interpret=interpret,
             m_transposed=fused,
         )
 
@@ -1268,7 +1312,7 @@ def transient_batch(
     pattern: StampPattern | None = None,
     interpret: bool | None = None,
     max_steps: int = 200_000,
-    check_every: int = 50,
+    check_every: int | None = None,
     x_ref: np.ndarray | None = None,
     dt_policy: str = "diag",
 ) -> BatchTransientResult:
@@ -1277,12 +1321,13 @@ def transient_batch(
     ``method``: ``"eig"`` — exact stacked eigendecomposition (O(nz^3)
     per system; the small-nz reference); ``"euler"`` — Pallas
     forward-Euler sweep (float32, settling time quantized to the
-    sweep's check interval); ``"spectral"`` — power-iteration/Lanczos
-    extreme-eigenvalue estimates only (:mod:`repro.core.spectral`):
-    device-resident on the ELL operators, predicts the settling time
-    from the slowest-mode estimate without integrating — the
-    estimator's accuracy caveats are documented in that module;
-    ``"auto"`` — eig up to ``EIG_STATE_LIMIT`` states, euler beyond.
+    sweep's check interval); ``"spectral"`` — matrix-free spectral
+    estimates only (:mod:`repro.core.spectral`): device-resident on
+    the ELL operators, predicts the settling time from the deflated
+    rightmost-mode extraction without integrating (within 2x of the
+    exact-eig slow mode on the reference set; the result additionally
+    carries the ``certified`` stability flags); ``"auto"`` — eig up to
+    ``EIG_STATE_LIMIT`` states, euler beyond.
 
     On the euler path ``stable`` means *settled within the
     ``max_steps`` budget* — a stiff but asymptotically stable system
@@ -1383,6 +1428,7 @@ def transient_batch(
             dominant_tau=tau,
             mirror_residual=np.full(b_count, np.nan),
             method="spectral",
+            certified=sb.certified,
         )
     if method != "euler":
         raise ValueError(f"unknown transient method {method!r}")
@@ -1404,6 +1450,15 @@ def transient_batch(
         z_star = dc_solve_batch(bss)
         nu = bss.n_unknowns
         x_star = z_star[:, :nu]
+    bounds = None
+    if dt_policy == "spectral":
+        # one full spectral pass: its abscissa-aware dt drives the
+        # integration and its predicted settling step count sizes the
+        # sweep chunks (kernels launch over the predicted horizon
+        # instead of polling every 50 steps)
+        from repro.core import spectral
+
+        bounds = spectral.spectral_bounds(bss, rtol=params.settle_rtol)
     steps, x_final, _res, dt = euler_settle_batch(
         bss,
         x_star,
@@ -1413,6 +1468,7 @@ def transient_batch(
         check_every=check_every,
         interpret=interpret,
         dt_policy=dt_policy,
+        bounds=bounds,
     )
     settled = np.all(
         np.abs(x_final - x_star)

@@ -67,11 +67,27 @@ class BatchSolveResult:
     def __len__(self) -> int:
         return self.x.shape[0]
 
+    @staticmethod
+    def _info_entry(v, b: int):
+        """Per-system view of one ``info`` entry.
+
+        Per-system arrays are indexed; shared values (python scalars,
+        0-d arrays, strings) pass through — and anything that lands as
+        a numpy scalar (0-d array or ``np.generic``) is normalized to
+        the matching python scalar, so batched and single-system
+        results round-trip identically regardless of how the metric was
+        recorded.
+        """
+        if isinstance(v, np.ndarray) and v.ndim >= 1:
+            v = v[b]
+        if isinstance(v, np.ndarray) and v.ndim == 0:
+            v = v[()]
+        if isinstance(v, np.generic):
+            v = v.item()
+        return v
+
     def __getitem__(self, b: int) -> SolveResult:
-        info = {
-            k: (v[b] if isinstance(v, np.ndarray) and v.ndim >= 1 else v)
-            for k, v in self.info.items()
-        }
+        info = {k: self._info_entry(v, b) for k, v in self.info.items()}
         return SolveResult(
             x=self.x[b],
             method=self.method,
@@ -134,10 +150,13 @@ def solve_batch(
     design, so assembly, DC solve and settling run as single batched
     device calls.  ``settle_method`` selects the transient path
     ("eig" — exact modal, the small-nz reference; "euler" — Pallas
-    forward-Euler sweep; "spectral" — power-iteration/Lanczos settling
-    *estimate*, no integration; "auto" — by state count).
+    forward-Euler sweep; "spectral" — the matrix-free settling
+    *estimate*, no integration: deflated rightmost-mode extraction
+    within 2x of the exact slow mode plus ``settle_certified``
+    stability flags in ``info``; "auto" — by state count).
     ``settle_dt_policy`` picks the euler step rule ("diag" |
-    "spectral" — the power-iteration bound).
+    "spectral" — the abscissa-aware per-mode rule, valid for
+    underdamped operators; see :func:`repro.core.engine._settle_dt`).
 
     ``settle_matrix_free=True`` opts the euler path into the ELL
     engine: assembly and sweep run device-resident with no
@@ -206,6 +225,10 @@ def solve_batch(
         result.info["dominant_tau"] = tr.dominant_tau
         result.info["mirror_residual"] = tr.mirror_residual
         result.info["settle_method"] = tr.method
+        if tr.certified is not None:
+            # spectral estimator: converged rightmost mode + contracting
+            # slow subspace (see repro.core.spectral.SpectralBounds)
+            result.info["settle_certified"] = tr.certified
     return result
 
 
@@ -221,6 +244,10 @@ def solve(
     beta: float = 0.5,
     alpha: float = 1.0,
     compute_settling: bool = False,
+    settle_method: str = "auto",
+    settle_max_steps: int = 200_000,
+    settle_dt_policy: str = "diag",
+    settle_matrix_free: bool = False,
     x_ref: np.ndarray | None = None,
     tol: float = 1e-10,
     max_iter: int = 10000,
@@ -233,7 +260,15 @@ def solve(
     :class:`NonIdealities` to engage the hardware error model.
 
     The analog paths are thin wrappers over :func:`solve_batch` with a
-    batch of one (exact settling via the modal path).
+    batch of one, and forward the settling controls unchanged —
+    ``settle_method`` / ``settle_dt_policy`` / ``settle_matrix_free`` /
+    ``settle_max_steps`` carry the same defaults and semantics as
+    :func:`solve_batch`, so single and batched callers reach the
+    euler/spectral paths identically.  ``"auto"`` resolves by state
+    count exactly as in the batched path: the exact modal reference up
+    to ``engine.EIG_STATE_LIMIT`` states, the f32 Euler sweep beyond
+    (pass ``settle_method="eig"`` to force the exact path — the
+    pre-PR-3 behavior — at any size).
     """
     a = np.asarray(a, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
@@ -264,7 +299,10 @@ def solve(
         beta=beta,
         alpha=alpha,
         compute_settling=compute_settling,
-        settle_method="eig",
+        settle_method=settle_method,
+        settle_max_steps=settle_max_steps,
+        settle_dt_policy=settle_dt_policy,
+        settle_matrix_free=settle_matrix_free,
         x_ref=None if x_ref is None else np.asarray(x_ref)[None, :],
     )
     return batch[0]

@@ -38,8 +38,10 @@ Solution paths:
   reference; at scale the engine offers the matrix-free forward-Euler
   sweep over device-resident ELL operators
   (``engine.transient_batch(method="euler", x_ref=...)``) and the
-  power-iteration/Lanczos settling estimate
-  (``method="spectral"``, :mod:`repro.core.spectral`).
+  spectral settling estimate — deflated rightmost-mode extraction
+  within 2x of the exact slow mode, with restricted numerical-range
+  stability certificates (``method="spectral"``,
+  :mod:`repro.core.spectral`).
 * :mod:`repro.core.transient_nl` — nonlinear ``lax.scan`` integration
   with slew-rate limiting and rail saturation; reproduces the
   instability signature (amp saturation) on non-PD systems (Fig. 8).

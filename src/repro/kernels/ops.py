@@ -15,6 +15,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import crosspoint_mvm as _mvm
 from repro.kernels import ell_transient as _ell
@@ -136,6 +137,33 @@ def ell_sweep_fits_vmem(nz: int, k: int) -> bool:
     """Whether one system's padded ELL operator is VMEM-resident."""
     nz_p = nz + (-nz) % 128
     return (nz_p * k * 8 + 3 * nz_p * 4) <= ELL_VMEM_BUDGET
+
+
+def sweep_chunk_schedule(
+    predicted_steps,
+    max_steps: int,
+    *,
+    floor: int = 50,
+    ceil: int = 4096,
+    splits: int = 8,
+) -> int:
+    """Fused-sweep chunk length from a spectral settling prediction.
+
+    Every chunk boundary costs a kernel launch plus a host sync for the
+    settling check, so a sweep that is predicted to run N steps should
+    not poll every 50: the chunk is sized to ``median(N) / splits`` —
+    launches amortized across the predicted horizon while the settling
+    time stays resolved to ~1/``splits`` of it (and over-integration
+    past the settle point is bounded by one chunk).  Non-finite
+    predictions (unstable systems) are ignored; with no finite
+    prediction the conservative ``floor`` is returned.
+    """
+    p = np.asarray(predicted_steps, dtype=np.float64).reshape(-1)
+    p = p[np.isfinite(p)]
+    if p.size == 0:
+        return floor
+    target = int(np.median(p) / max(splits, 1))
+    return int(np.clip(target, floor, max(min(ceil, max_steps), floor)))
 
 
 def sweep_backend(nz: int, k: int | None) -> str:

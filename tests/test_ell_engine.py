@@ -77,6 +77,12 @@ def test_ell_spmv_matches_dense_matvec():
     got_t = np.asarray(ell.matvec_t(jnp.asarray(z)))
     np.testing.assert_allclose(got_t, want_t, rtol=1e-12,
                                atol=1e-12 * np.abs(want_t).max())
+    # block form (the spectral subspace iteration's workhorse)
+    zb = rng.standard_normal((len(nets), 5, ell.n_states))
+    want_b = np.einsum("bij,bkj->bki", dense.m, zb)
+    got_b = np.asarray(ell.matvec_block(jnp.asarray(zb)))
+    np.testing.assert_allclose(got_b, want_b, rtol=1e-12,
+                               atol=1e-12 * np.abs(want_b).max())
     np.testing.assert_allclose(
         np.asarray(ell.diagonal()),
         np.diagonal(dense.m, axis1=1, axis2=2),
@@ -202,8 +208,9 @@ def test_transient_batch_euler_matrix_free():
 
 # ------------------------------------------------------------- spectral
 def test_spectral_bounds_against_exact_eig():
-    """Power-iteration rate within ~15% of |lambda|_max; slow-mode and
-    settling estimates within the documented order-of-magnitude band."""
+    """Power-iteration rate within ~15% of |lambda|_max; the deflated
+    slow-mode estimate within the 2x accuracy contract (see
+    tests/test_spectral_settling.py for the full contract suite)."""
     nets, x = _batch(47, 14, 4)
     dense = engine.assemble_batch(nets)
     ell = engine.assemble_batch_ell(nets)
@@ -216,18 +223,25 @@ def test_spectral_bounds_against_exact_eig():
     # direction (smaller dt)
     assert np.all(sb.rate_max > 0.6 * true_rate)
     assert np.all(sb.rate_max < 3.0 * true_rate)
-    # forward-Euler stability: dt * |lambda|_max < 2
+    # forward-Euler stability: dt * |lambda|_max < 2, per-mode circle
+    # condition over the exact spectrum
     assert np.all(sb.dt * true_rate < 2.0)
+    for b in range(len(nets)):
+        assert np.abs(1.0 + sb.dt[b] * lam[b]).max() <= 1.0 + 1e-9
     assert np.all(sb.stable)
 
     true_slow = np.array([la.real[la.real < 0].max() for la in lam])
     assert np.all(sb.slow_re < 0)
     ratio = sb.slow_re / true_slow
-    assert np.all((ratio > 0.1) & (ratio < 20.0))
+    assert np.all((ratio > 0.5) & (ratio < 2.0))
 
+    # settling prediction vs the exact modal settling criterion: the
+    # e-folding estimate is amplitude-blind, so this band stays wider
+    # than the eigenvalue band — but orders of magnitude tighter than
+    # the old estimator's
     tr = engine.transient_batch(nets, method="eig")
     ratio_t = sb.settle_time / tr.settle_time
-    assert np.all((ratio_t > 1e-2) & (ratio_t < 1e2))
+    assert np.all((ratio_t > 0.2) & (ratio_t < 5.0))
 
 
 def test_spectral_flags_unstable_system():
