@@ -17,6 +17,12 @@ dense operators cannot reach), the dense-vs-ELL speedup at the largest
 dense-feasible size, and the parity-guard verdict.  Future PRs regress
 against this file.
 
+The ``service`` phase (gate with ``--pr5`` / ``--no-pr5``; default
+mirrors the pr2 gate) runs the request-batched solve service over the
+mixed-size stream and writes its throughput/parity baseline to
+``BENCH_pr5.json`` (``--json-pr5`` to relocate); the dedicated
+multi-device sweep lives in ``benchmarks.solve_service``.
+
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
 """
 
@@ -28,6 +34,25 @@ import sys
 import time
 
 BENCH_SCHEMA = "bench_pr2.v1"
+BENCH_PR5_SCHEMA = "bench_pr5.v1"
+
+
+def _pr5_service(full: bool) -> dict:
+    """The PR-5 serving baseline: bucketed request-batched throughput.
+
+    Single-host here (the forced-multi-device sweep is the dedicated
+    ``benchmarks.solve_service`` CLI / CI job); records requests/sec,
+    pad overhead and the per-request parity verdict at two slot counts.
+    """
+    from benchmarks.solve_service import build_stream, run_service
+
+    systems = build_stream(0, 2 if full else 1)
+    out: dict = {}
+    t0 = time.time()
+    out["slot2"] = run_service(systems, batch_slots=2)
+    out["slot4"] = run_service(systems, batch_slots=4)
+    out["service_wall_s"] = time.time() - t0
+    return out
 
 
 def _pr2_trajectory(full: bool) -> dict:
@@ -58,6 +83,12 @@ def main() -> None:
                     help="run the PR-2 perf trajectory (sparse n-sweep, "
                          "dense-vs-ELL, parity); default: only on "
                          "unfiltered runs")
+    ap.add_argument("--json-pr5", default="BENCH_pr5.json",
+                    help="solve-service baseline output path ('' to skip)")
+    ap.add_argument("--pr5", default=None, action=argparse.BooleanOptionalAction,
+                    help="run the solve-service phase (bucketed "
+                         "request-batched throughput + parity); default: "
+                         "only on unfiltered runs")
     args = ap.parse_args()
 
     from benchmarks.common import emit
@@ -101,6 +132,33 @@ def main() -> None:
         # file was written
         if doc["parity_failures"]:
             print("bench_json,parity,FAIL", file=sys.stderr)
+            raise SystemExit(1)
+
+    want_pr5 = args.pr5 if args.pr5 is not None else not only
+    if want_pr5:
+        import jax
+
+        t5 = time.time()
+        doc5 = {
+            "schema": BENCH_PR5_SCHEMA,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "full": bool(args.full),
+            "n_devices_visible": len(jax.devices()),
+            **_pr5_service(args.full),
+        }
+        print(f"service,wall_s,{time.time() - t5:.1f}")
+        failures = [
+            f
+            for key in ("slot2", "slot4")
+            for f in doc5[key]["parity_failures"]
+        ]
+        if args.json_pr5:
+            with open(args.json_pr5, "w") as fh:
+                json.dump(doc5, fh, indent=2, sort_keys=True, default=str)
+            print(f"bench_json,path,{args.json_pr5}")
+        if failures:
+            print("bench_json,service_parity,FAIL", file=sys.stderr)
             raise SystemExit(1)
     print(f"total,wall_s,{time.time() - t0:.1f}")
 

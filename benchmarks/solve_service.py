@@ -1,0 +1,163 @@
+"""Solve-service throughput benchmark (the PR-5 serving baseline).
+
+Streams a mixed-size request set (n in {16, 64, 192}, both analog
+designs plus a digital baseline) through :class:`repro.serving.SolveService`
+and records requests/sec versus batch-slot count and device count into
+``BENCH_pr5.json``.  Every request's solution is checked against a
+direct :func:`repro.core.solver.solve` — any mismatch beyond tolerance
+is a benchmark *failure* (nonzero exit), which is how the CI
+forced-multi-device smoke job guards the sharded dispatch path.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python -m benchmarks.solve_service --smoke
+
+``--smoke`` shrinks the stream (CI wall-clock) but keeps the full
+size/method mix and the >= 2-device sweep point.  The analog_n design
+rides at n=16 only: its preliminary netlist carries O(n^2) cells, so
+larger sizes belong to the 2n design by construction (Table 2).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+PARITY_ATOL = 1e-9
+BENCH_SCHEMA = "bench_pr5.v1"
+
+
+def build_stream(seed: int, repeat: int) -> list[dict]:
+    """The mixed request stream: (n, method) mix x ``repeat``."""
+    from repro.data.spd import random_rhs_from_solution, random_sdd, random_spd
+
+    mix = [
+        (16, "analog_2n", "spd"),
+        (16, "analog_2n", "sdd"),
+        (16, "analog_n", "spd"),
+        (16, "cholesky", "spd"),
+        (24, "analog_2n", "spd"),     # off-grid: pads into the n=32 bucket
+        (64, "analog_2n", "spd"),
+        (64, "cholesky", "spd"),
+        (192, "analog_2n", "spd"),
+        (192, "cholesky", "spd"),
+    ]
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(repeat):
+        for n, method, kind in mix:
+            a = random_sdd(rng, n) if kind == "sdd" else random_spd(rng, n)
+            x, b = random_rhs_from_solution(rng, a)
+            out.append({"a": a, "b": b, "x": x, "n": n, "method": method})
+    return out
+
+
+def run_service(systems: list[dict], *, batch_slots: int, mesh=None) -> dict:
+    """One service pass; returns throughput + parity stats."""
+    from repro.core.solver import solve
+    from repro.serving.solve_service import SolveService
+
+    svc = SolveService(batch_slots=batch_slots, mesh=mesh)
+    rids = [svc.submit(s["a"], s["b"], method=s["method"]) for s in systems]
+    t0 = time.perf_counter()
+    results = svc.drain()
+    wall = time.perf_counter() - t0
+
+    worst = 0.0
+    failures = []
+    for rid, s in zip(rids, systems):
+        direct = solve(s["a"], s["b"], method=s["method"])
+        err = float(np.abs(results[rid].x - direct.x).max())
+        worst = max(worst, err)
+        if err > PARITY_ATOL:
+            failures.append(
+                {"rid": rid, "n": s["n"], "method": s["method"], "err": err}
+            )
+    stats = svc.stats
+    return {
+        "requests": len(systems),
+        "batch_slots": stats["batch_slots"],
+        "devices": stats["devices"],
+        "wall_s": wall,
+        "requests_per_s": len(systems) / wall,
+        "pad_overhead": stats["pad_overhead"],
+        "fill_slots": stats["fill_slots"],
+        "parity_worst": worst,
+        "parity_failures": failures,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced stream for CI wall-clock")
+    ap.add_argument("--json", default="BENCH_pr5.json",
+                    help="output path ('' to skip)")
+    ap.add_argument("--slots", default="",
+                    help="comma-separated slot counts (default by mode)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    n_dev = len(jax.devices())
+    repeat = 1 if args.smoke else 4
+    systems = build_stream(args.seed, repeat)
+    if args.slots:
+        slot_sweep = [int(s) for s in args.slots.split(",")]
+    else:
+        slot_sweep = [2, 4] if args.smoke else [1, 2, 4, 8]
+
+    doc: dict = {
+        "schema": BENCH_SCHEMA,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "smoke": bool(args.smoke),
+        "n_devices_visible": n_dev,
+        "stream": sorted({(s["n"], s["method"]) for s in systems}),
+        "slot_sweep": [],
+        "device_sweep": [],
+    }
+
+    print("sweep,slots,devices,requests_per_s,parity_worst")
+    for slots in slot_sweep:
+        r = run_service(systems, batch_slots=slots)
+        doc["slot_sweep"].append(r)
+        print(f"slots,{r['batch_slots']},{r['devices']},"
+              f"{r['requests_per_s']:.3f},{r['parity_worst']:.3g}")
+
+    # device sweep at the largest slot count; the >= 2-device point is
+    # the sharded-dispatch guard (CI forces 8 host devices)
+    from repro.distributed.sharding import solver_mesh
+
+    dev_sweep = sorted({1, n_dev} | ({2} if n_dev >= 2 else set()))
+    for dev in dev_sweep:
+        mesh = solver_mesh(dev) if dev > 1 else None
+        r = run_service(systems, batch_slots=max(slot_sweep), mesh=mesh)
+        doc["device_sweep"].append(r)
+        print(f"devices,{r['batch_slots']},{r['devices']},"
+              f"{r['requests_per_s']:.3f},{r['parity_worst']:.3g}")
+
+    failures = [
+        f
+        for r in doc["slot_sweep"] + doc["device_sweep"]
+        for f in r["parity_failures"]
+    ]
+    doc["parity_failures"] = failures
+    doc["sharded_point_ran"] = any(
+        r["devices"] >= 2 for r in doc["device_sweep"]
+    )
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True, default=str)
+        print(f"bench_json,path,{args.json}")
+    if failures:
+        print(f"service,parity,FAIL ({len(failures)} mismatches)")
+        raise SystemExit(1)
+    print("service,parity,OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -67,7 +67,9 @@ from repro.core.transform import (  # noqa: E402
 from repro.core.network import (  # noqa: E402
     Netlist,
     build_preliminary,
+    build_preliminary_batch,
     build_proposed,
+    build_proposed_batch,
 )
 from repro.core.transient import (  # noqa: E402
     StateSpace,
@@ -121,7 +123,9 @@ __all__ = [
     "transform_2n",
     "Netlist",
     "build_preliminary",
+    "build_preliminary_batch",
     "build_proposed",
+    "build_proposed_batch",
     "StateSpace",
     "TransientResult",
     "assemble_state_space",

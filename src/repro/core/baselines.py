@@ -9,6 +9,18 @@ All pure JAX (jit-compatible, differentiable where it matters):
 
 These back the digital path of :func:`repro.core.solver.solve` and the
 CG backend of the AnalogNewton optimizer.
+
+Batched forms (``*_solve_batch``) drive the batched dispatch of
+:func:`repro.core.solver.solve_batch` and the request-batched solve
+service (:mod:`repro.serving.solve_service`): one device call per
+batch, with the iterative methods *freezing* each system at its own
+convergence step — the per-system iterates (and therefore the reported
+``iterations`` / ``residual_norm``) match a loop of single-system
+solves, while the batch keeps stepping until every system is done.
+Inputs placed with a batch-axis ``NamedSharding`` keep that sharding
+through the solve (every op is batch-elementwise except the scalar
+convergence reduction), which is how the solve service spreads a
+micro-batch over devices.
 """
 
 from __future__ import annotations
@@ -92,4 +104,110 @@ def jacobi_solve(
     x0 = b / d
     res0 = jnp.linalg.norm(b - a @ x0)
     x, res, it = jax.lax.while_loop(cond, body, (x0, res0, jnp.ones((), jnp.int32)))
+    return IterativeResult(x=x, iterations=it, residual_norm=res)
+
+
+# ---------------------------------------------------------------------------
+# Batched baselines (single device call per batch, per-system freezing)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def cholesky_solve_batch(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Vmapped :func:`cholesky_solve`: ``a`` (B, n, n), ``b`` (B, n)."""
+    return jax.vmap(cholesky_solve)(a, b)
+
+
+def _bdot(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Per-system inner product (B, n) x (B, n) -> (B,)."""
+    return jnp.einsum("bi,bi->b", u, v)
+
+
+def _bmv(a: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Per-system matvec (B, n, n) x (B, n) -> (B, n)."""
+    return jnp.einsum("bij,bj->bi", a, v)
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def cg_solve_batch(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 1000,
+) -> IterativeResult:
+    """Batched CG with per-system convergence freezing.
+
+    A system whose relative residual has crossed ``tol`` stops updating
+    (its ``x``/``r``/``p`` are held), so its iterate sequence — and its
+    recorded ``iterations`` — is exactly what :func:`cg_solve` would
+    produce for that system alone; the batch loop runs until the
+    slowest system converges or ``max_iter``.
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rs = _bdot(r, r)
+    b_norm2 = jnp.maximum(_bdot(b, b), 1e-300)
+
+    def active_mask(rs, it):
+        return (rs / b_norm2 > tol * tol) & (it < max_iter)
+
+    def cond(state):
+        _, _, _, rs, it = state
+        return jnp.any(active_mask(rs, it))
+
+    def body(state):
+        x, r, p, rs, it = state
+        act = active_mask(rs, it)
+        ap = _bmv(a, p)
+        pap = _bdot(p, ap)
+        alpha = jnp.where(act, rs / jnp.where(pap == 0.0, 1.0, pap), 0.0)
+        x = x + alpha[:, None] * p
+        r_new = r - alpha[:, None] * ap
+        rs_new = _bdot(r_new, r_new)
+        beta = rs_new / jnp.where(rs == 0.0, 1.0, rs)
+        p = jnp.where(act[:, None], r_new + beta[:, None] * p, p)
+        r = jnp.where(act[:, None], r_new, r)
+        rs = jnp.where(act, rs_new, rs)
+        return (x, r, p, rs, it + act.astype(jnp.int32))
+
+    it0 = jnp.zeros(b.shape[0], jnp.int32)
+    x, r, p, rs, it = jax.lax.while_loop(cond, body, (x, r, p, rs, it0))
+    return IterativeResult(x=x, iterations=it, residual_norm=jnp.sqrt(rs))
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def jacobi_solve_batch(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 10000,
+) -> IterativeResult:
+    """Batched Jacobi iteration with per-system convergence freezing."""
+    d = jnp.diagonal(a, axis1=1, axis2=2)
+    r_op = a - jnp.einsum("bi,ij->bij", d, jnp.eye(b.shape[1], dtype=a.dtype))
+    b_norm = jnp.maximum(jnp.linalg.norm(b, axis=1), 1e-300)
+
+    def active_mask(res, it):
+        return (res / b_norm > tol) & (it < max_iter)
+
+    def cond(state):
+        _, res, it = state
+        return jnp.any(active_mask(res, it))
+
+    def body(state):
+        x, res, it = state
+        act = active_mask(res, it)
+        x_new = (b - _bmv(r_op, x)) / d
+        res_new = jnp.linalg.norm(b - _bmv(a, x_new), axis=1)
+        x = jnp.where(act[:, None], x_new, x)
+        res = jnp.where(act, res_new, res)
+        return (x, res, it + act.astype(jnp.int32))
+
+    x0 = b / d
+    res0 = jnp.linalg.norm(b - _bmv(a, x0), axis=1)
+    it0 = jnp.ones(b.shape[0], jnp.int32)
+    x, res, it = jax.lax.while_loop(cond, body, (x0, res0, it0))
     return IterativeResult(x=x, iterations=it, residual_norm=res)

@@ -296,6 +296,52 @@ def pattern_union(
     )
 
 
+def pattern_covers(pat: StampPattern, nets: list[Netlist]) -> bool:
+    """Whether every cell of every netlist lands on a slot of ``pat``.
+
+    The solve service uses this to decide if its bucket-cached pattern
+    can be reused for a new micro-batch (cheap set membership — no
+    assembly, no exceptions as control flow).
+    """
+    pair_keys = pat.pair_keys()
+    for net in nets:
+        if net.n_nodes != pat.n_nodes or net.n_unknowns != pat.n_unknowns:
+            return False
+        pair = net.cell_j >= 0
+        keys = net.cell_i[pair] * pat.n_nodes + net.cell_j[pair]
+        if not np.all(np.isin(keys, pair_keys)):
+            return False
+        if not np.all(np.isin(net.cell_i[~pair], pat.gcell_i)):
+            return False
+    return True
+
+
+def pattern_merge(a: StampPattern, b: StampPattern) -> StampPattern:
+    """Smallest cached pattern covering both ``a`` and ``b``.
+
+    Patterns must belong to the same ``(design, n, buffers)`` family;
+    the merged slot set is the union of pair and ground slots.  Used by
+    the solve service when a later micro-batch stamps a cell its
+    bucket's cached pattern does not carry.
+    """
+    if (
+        a.design != b.design
+        or a.n_nodes != b.n_nodes
+        or a.n_unknowns != b.n_unknowns
+        or a.states_per_amp != b.states_per_amp
+        or a.buffers != b.buffers
+    ):
+        raise ValueError("cannot merge patterns from different families")
+    keys = np.union1d(a.pair_keys(), b.pair_keys())
+    pair_i = keys // a.n_nodes
+    pair_j = keys % a.n_nodes
+    gset = np.union1d(a.gcell_i, b.gcell_i)
+    return _cached_pattern(
+        a.design, a.n_nodes, a.n_unknowns, pair_i, pair_j, gset,
+        a.states_per_amp, a.buffers,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Batched assembly
 # ---------------------------------------------------------------------------
@@ -966,14 +1012,26 @@ def _dc_solve_vmapped(m: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     return jax.vmap(jnp.linalg.solve)(m, -c)
 
 
-def dc_solve_batch(bss: BatchedStateSpace) -> np.ndarray:
+def dc_solve_batch(bss: BatchedStateSpace, *, mesh=None) -> np.ndarray:
     """Steady states ``z_b = -M_b^{-1} c_b`` for the whole batch.
 
     Runs the vmapped x64 solve on device; systems whose operator is
     singular (degenerate supports, see the single-system path) are
     re-solved with the tiny relative leakage ``1e-12 |M|`` to ground.
+
+    ``mesh`` (a 1-d solver mesh over the batch axis, see
+    :func:`repro.distributed.sharding.solver_mesh`) places the operator
+    batch with a batch-axis ``NamedSharding`` before the solve; the
+    per-system factorizations are independent, so the vmapped solve
+    partitions cleanly across devices.
     """
-    z = np.asarray(_dc_solve_vmapped(jnp.asarray(bss.m), jnp.asarray(bss.c)))
+    m = jnp.asarray(bss.m)
+    c = jnp.asarray(bss.c)
+    if mesh is not None:
+        from repro.distributed.sharding import shard_system_batch
+
+        m, c = shard_system_batch(m, c, mesh=mesh)
+    z = np.asarray(_dc_solve_vmapped(m, c))
     bad = ~np.all(np.isfinite(z), axis=1)
     if np.any(bad):
         eye = np.eye(bss.n_states)

@@ -204,6 +204,7 @@ def operating_point_batch(
     nonideal: NonIdealities = DEFAULT_NONIDEAL,
     x_ref: np.ndarray | None = None,
     pattern: "engine.StampPattern | None" = None,
+    mesh=None,
 ) -> BatchOperatingPoint:
     """Batched DC solve of the (non-ideal) circuits.
 
@@ -212,6 +213,8 @@ def operating_point_batch(
     the same per-system RNG stream), then the whole batch is assembled
     on one shared stamp pattern and solved with the engine's vmapped
     x64 linear solve.  ``x_ref`` is (B, n) (or None to skip errors).
+    ``mesh`` shards the DC solve's batch axis over a 1-d solver mesh
+    (:func:`repro.distributed.sharding.solver_mesh`).
     """
     spec = opamp
     if not nonideal.use_finite_gain:
@@ -222,7 +225,7 @@ def operating_point_batch(
         for net in nets_ni
     ]
     bss = engine.assemble_batch(nets_ni, spec, v_os=v_os, pattern=pattern)
-    z = engine.dc_solve_batch(bss)
+    z = engine.dc_solve_batch(bss, mesh=mesh)
 
     nn = bss.n_nodes
     nu = bss.n_unknowns

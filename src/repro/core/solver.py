@@ -28,10 +28,17 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines, engine
-from repro.core.network import Netlist, build_preliminary, build_proposed
+from repro.core.network import (
+    Netlist,
+    build_preliminary,
+    build_preliminary_batch,
+    build_proposed,
+    build_proposed_batch,
+)
 from repro.core.operating_point import (
     DEFAULT_NONIDEAL,
     IDEAL,
@@ -100,6 +107,10 @@ class BatchSolveResult:
         )
 
 
+ANALOG_METHODS = ("analog_2n", "analog_n")
+DIGITAL_METHODS = ("cholesky", "cg", "jacobi")
+
+
 def _build_nets(
     a: np.ndarray,
     b: np.ndarray,
@@ -111,19 +122,63 @@ def _build_nets(
     params: CircuitParams,
 ) -> list[Netlist]:
     if method == "analog_2n":
-        return [
-            build_proposed(
-                a[k], b[k], d_policy=d_policy, beta=beta, alpha=alpha,
-                params=params,
-            )
-            for k in range(a.shape[0])
-        ]
+        return build_proposed_batch(
+            a, b, d_policy=d_policy, beta=beta, alpha=alpha, params=params
+        )
     if method == "analog_n":
-        return [
-            build_preliminary(a[k], b[k], params=params)
-            for k in range(a.shape[0])
-        ]
+        return build_preliminary_batch(a, b, params=params)
     raise ValueError(f"unknown analog method {method!r}")
+
+
+def _solve_batch_digital(
+    a: np.ndarray,
+    b: np.ndarray,
+    method: str,
+    *,
+    tol: float,
+    max_iter: int,
+    mesh=None,
+) -> BatchSolveResult:
+    """Batched digital-baseline dispatch (vmapped Cholesky, batched
+    CG/Jacobi with per-system convergence freezing).
+
+    Mirrors the single-system digital branch of :func:`solve` exactly:
+    ``stable`` is all-True (the baselines carry no circuit stability
+    notion) and ``info`` holds per-system ``iterations`` /
+    ``residual_norm`` for the iterative methods, so
+    ``solve_batch(...)[k]`` round-trips to what ``solve(a[k], b[k])``
+    returns.  ``mesh`` (a 1-d solver mesh, see
+    :func:`repro.distributed.sharding.solver_mesh`) shards the batch
+    axis over devices before the solve.
+    """
+    aj = jnp.asarray(a)
+    bj = jnp.asarray(b)
+    if mesh is not None:
+        from repro.distributed.sharding import shard_system_batch
+
+        aj, bj = shard_system_batch(aj, bj, mesh=mesh)
+    info: dict[str, Any] = {}
+    if method == "cholesky":
+        x = np.asarray(baselines.cholesky_solve_batch(aj, bj))
+    else:
+        fn = (
+            baselines.cg_solve_batch
+            if method == "cg"
+            else baselines.jacobi_solve_batch
+        )
+        res = fn(aj, bj, tol=tol, max_iter=max_iter)
+        x = np.asarray(res.x)
+        info = {
+            "iterations": np.asarray(res.iterations, dtype=np.int64),
+            "residual_norm": np.asarray(res.residual_norm, dtype=np.float64),
+        }
+    return BatchSolveResult(
+        x=x,
+        method=method,
+        stable=np.ones(a.shape[0], dtype=bool),
+        settle_time=None,
+        info=info,
+    )
 
 
 def solve_batch(
@@ -143,12 +198,22 @@ def solve_batch(
     settle_dt_policy: str = "diag",
     settle_matrix_free: bool = False,
     x_ref: np.ndarray | None = None,
+    tol: float = 1e-10,
+    max_iter: int = 10000,
+    pattern: "engine.StampPattern | None" = None,
+    mesh=None,
+    nets: list[Netlist] | None = None,
 ) -> BatchSolveResult:
     """Solve a batch of SPD systems ``A[k] x[k] = b[k]``.
 
     ``a`` is (B, n, n), ``b`` (B, n); all systems share one circuit
     design, so assembly, DC solve and settling run as single batched
-    device calls.  ``settle_method`` selects the transient path
+    device calls.  ``method`` dispatches exactly like :func:`solve`:
+    the analog designs run the batched circuit physics, while
+    ``"cholesky"`` / ``"cg"`` / ``"jacobi"`` run the batched digital
+    baselines (vmapped factorization, batched iterations with
+    per-system convergence freezing — ``tol`` / ``max_iter`` apply to
+    the iterative ones).  ``settle_method`` selects the transient path
     ("eig" — exact modal, the small-nz reference; "euler" — Pallas
     forward-Euler sweep; "spectral" — the matrix-free settling
     *estimate*, no integration: deflated rightmost-mode extraction
@@ -164,23 +229,48 @@ def solve_batch(
     instead of the circuit's DC fixed point — semantics the default
     preserves for existing callers — and ``mirror_residual`` is NaN
     (there is no DC state to read the mirror nodes from).
+
+    ``pattern`` pre-pins the shared stamp pattern (it must cover every
+    system's cells — the solve service caches one per request bucket
+    and reuses it across micro-batches); ``mesh`` shards the batch
+    axis of the heavy device calls (DC solve / digital baselines) over
+    a 1-d solver mesh (:func:`repro.distributed.sharding.solver_mesh`).
+    ``nets`` hands over pre-built netlists for the analog methods (they
+    MUST be the builders' output for exactly ``(a, b, method)`` and the
+    design options — a performance passthrough for callers like the
+    solve service that already built them, not a way to solve arbitrary
+    netlists; use :func:`repro.core.engine.transient_batch` for that).
     """
     a = np.asarray(a, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
     if a.ndim != 3 or b.ndim != 2 or a.shape[:2] != (b.shape[0], b.shape[1]):
         raise ValueError(f"expected (B, n, n) and (B, n); got {a.shape}, {b.shape}")
+    if method in DIGITAL_METHODS:
+        return _solve_batch_digital(
+            a, b, method, tol=tol, max_iter=max_iter, mesh=mesh
+        )
+    if method not in ANALOG_METHODS:
+        raise ValueError(
+            f"unknown method {method!r}: expected one of "
+            f"{ANALOG_METHODS + DIGITAL_METHODS}"
+        )
 
     spec = OPAMPS[opamp] if isinstance(opamp, str) else opamp
     ni = IDEAL if nonideal is None else nonideal
 
-    nets = _build_nets(
-        a, b, method, d_policy=d_policy, beta=beta, alpha=alpha, params=params
-    )
-    pattern = engine.pattern_union(nets, spec)
+    if nets is None:
+        nets = _build_nets(
+            a, b, method, d_policy=d_policy, beta=beta, alpha=alpha,
+            params=params,
+        )
+    elif len(nets) != a.shape[0]:
+        raise ValueError(f"got {len(nets)} nets for a batch of {a.shape[0]}")
+    if pattern is None:
+        pattern = engine.pattern_union(nets, spec)
     # non-idealities perturb conductance values, never the cell pattern,
     # so the clean-net pattern is shared with the OP assembly
     op = operating_point_batch(
-        nets, spec, nonideal=ni, x_ref=x_ref, pattern=pattern
+        nets, spec, nonideal=ni, x_ref=x_ref, pattern=pattern, mesh=mesh
     )
     info: dict[str, Any] = {
         "design": np.asarray([net.design for net in nets]),
@@ -273,7 +363,7 @@ def solve(
     a = np.asarray(a, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
 
-    if method in ("cholesky", "cg", "jacobi"):
+    if method in DIGITAL_METHODS:
         if method == "cholesky":
             x = np.asarray(baselines.cholesky_solve(a, b))
             return SolveResult(x=x, method=method)

@@ -108,3 +108,72 @@ def param_specs(logical_tree, rules: Mapping[str, object]):
         logical_tree,
         is_leaf=lambda v: isinstance(v, tuple),
     )
+
+
+# ---------------------------------------------------------------------------
+# Solver-side mesh rules (the solve service's system-batch data parallelism)
+# ---------------------------------------------------------------------------
+#
+# The solver workload has exactly one shardable axis: the *system batch*
+# (independent SPD systems streamed through `solve_batch`).  Matrix rows
+# and columns stay unsharded — paper-scale operators fit on one device,
+# and the per-system LU/Cholesky factorizations do not partition.  The
+# rules therefore map the logical "sysbatch" axis to the mesh and pin
+# everything else replicated, mirroring how the model side treats
+# "batch".
+
+SOLVER_BATCH_AXIS = "sysbatch"
+
+SOLVER_RULES: dict[str, object] = {
+    "sysbatch": SOLVER_BATCH_AXIS,   # independent systems -> devices
+    "row": None,                     # operator rows stay on-device
+    "col": None,
+    "state": None,                   # circuit state vectors unsharded
+}
+
+
+def solver_mesh(n_devices: Optional[int] = None, devices=None):
+    """1-d solver mesh over the system-batch axis.
+
+    Built through the jax-0.4.37 shims (:func:`repro.launch.mesh._make_mesh`),
+    so it works on both API generations and on
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` placeholder
+    devices.  ``n_devices=None`` uses every visible device.
+    """
+    from repro.launch.mesh import _make_mesh
+
+    devs = list(jax.devices() if devices is None else devices)
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise RuntimeError(
+                f"solver mesh wants {n_devices} devices, have {len(devs)}"
+            )
+        devs = devs[:n_devices]
+    return _make_mesh((len(devs),), (SOLVER_BATCH_AXIS,), devs)
+
+
+def system_batch_sharding(mesh, ndim: int):
+    """``NamedSharding`` splitting axis 0 (the system batch) over ``mesh``."""
+    from jax.sharding import NamedSharding
+
+    return NamedSharding(mesh, P(SOLVER_BATCH_AXIS, *([None] * (ndim - 1))))
+
+
+def shard_system_batch(*arrays, mesh):
+    """Place each array with its batch axis split over the solver mesh.
+
+    The batch size must divide evenly — the solve service pads every
+    micro-batch to a multiple of the device count before dispatch, and
+    direct callers get a clear error instead of a GSPMD shape failure.
+    """
+    n_dev = mesh.devices.size
+    out = []
+    for x in arrays:
+        if x.shape[0] % n_dev:
+            raise ValueError(
+                f"batch of {x.shape[0]} does not divide over {n_dev} "
+                f"devices; pad the batch (the solve service does this "
+                f"automatically)"
+            )
+        out.append(jax.device_put(x, system_batch_sharding(mesh, x.ndim)))
+    return tuple(out) if len(out) != 1 else out[0]

@@ -104,6 +104,26 @@ def attn_forward(
     return out, (k, v)
 
 
+def pos_vector(pos, batch: int) -> jnp.ndarray:
+    """Normalize a decode position to a per-sequence (B,) int32 vector.
+
+    Accepts the legacy scalar ``()`` position (uniform across the
+    batch) or an explicit per-slot ``(B,)`` vector — the serving
+    engine's continuous batching runs slots at different lengths, so
+    each slot must write its KV row (and rotate its query) at its own
+    position.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(jnp.reshape(pos, (-1,)), (batch,))
+
+
+def _cache_row_write(cache: jnp.ndarray, new: jnp.ndarray, pos_vec: jnp.ndarray):
+    """Write one new KV row per sequence: cache (B, S, KV, dh) gets
+    ``new[:, 0]`` scattered at row ``pos_vec[b]`` of sequence ``b``."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), pos_vec].set(new[:, 0].astype(cache.dtype))
+
+
 def attn_decode(
     x: jnp.ndarray,
     p: dict,
@@ -112,7 +132,7 @@ def attn_decode(
     cache_v: jnp.ndarray,
     pos: jnp.ndarray,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """One-token step; cache_k/v: (B, S, KV, dh); pos: () int32."""
+    """One-token step; cache_k/v: (B, S, KV, dh); pos: () or (B,) int32."""
     b, _, d = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
@@ -120,13 +140,12 @@ def attn_decode(
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
-    pos_arr = jnp.reshape(pos, (1,))
-    q = apply_rope(q, pos_arr[None, :], cfg.rope_theta)
-    k = apply_rope(k, pos_arr[None, :], cfg.rope_theta)
-    zero = jnp.asarray(0, pos.dtype) if hasattr(pos, "dtype") else 0
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (zero, pos, zero, zero))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (zero, pos, zero, zero))
-    o = attn_lib.decode_attention(q, cache_k, cache_v, pos)
+    pos_vec = pos_vector(pos, b)
+    q = apply_rope(q, pos_vec[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos_vec[:, None], cfg.rope_theta)
+    cache_k = _cache_row_write(cache_k, k, pos_vec)
+    cache_v = _cache_row_write(cache_v, v, pos_vec)
+    o = attn_lib.decode_attention(q, cache_k, cache_v, pos_vec)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     return out, cache_k, cache_v
 
@@ -471,10 +490,10 @@ def decoder_block_decode(
     q = jnp.einsum("bsd,dhk->bshk", hx, p["attn"]["wq"])
     k = jnp.einsum("bsd,dhk->bshk", hx, p["attn"]["wk"])
     v = jnp.einsum("bsd,dhk->bshk", hx, p["attn"]["wv"])
-    zero = jnp.asarray(0, pos.dtype) if hasattr(pos, "dtype") else 0
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (zero, pos, zero, zero))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (zero, pos, zero, zero))
-    o = attn_lib.decode_attention(q, cache_k, cache_v, pos)
+    pos_vec = pos_vector(pos, b)
+    cache_k = _cache_row_write(cache_k, k, pos_vec)
+    cache_v = _cache_row_write(cache_v, v, pos_vec)
+    o = attn_lib.decode_attention(q, cache_k, cache_v, pos_vec)
     x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
 
     hq = layer_norm(x, p["ln_x"]["scale"], p["ln_x"]["bias"], cfg.norm_eps)

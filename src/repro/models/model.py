@@ -267,11 +267,17 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
 def decode_step(
     params: dict,
     token: jnp.ndarray,       # (B, 1) int32
-    pos: jnp.ndarray,         # () int32 current length
+    pos: jnp.ndarray,         # () or (B,) int32 current length(s)
     cache: dict,
     cfg: ModelConfig,
 ) -> tuple[jnp.ndarray, dict]:
-    """One token for every family.  Returns (logits (B, vocab), cache)."""
+    """One token for every family.  Returns (logits (B, vocab), cache).
+
+    ``pos`` may be a scalar (every sequence at the same length) or a
+    per-sequence ``(B,)`` vector — continuous batching runs slots at
+    staggered lengths, and each slot's KV row / rotary phase / mask must
+    use that slot's own position.
+    """
     x = embed_tokens(token, params["embed"])
     x = lc(x, ("batch", None, None))
 
@@ -340,9 +346,12 @@ def decode_step(
         }
 
     elif cfg.family == "encdec":
+        from repro.models.blocks import pos_vector
         from repro.models.layers import sinusoid_position_at
 
-        x = x + sinusoid_position_at(pos, cfg.d_model)[None, None, :].astype(x.dtype)
+        pos_vec = pos_vector(pos, token.shape[0])
+        pe = jax.vmap(lambda pp: sinusoid_position_at(pp, cfg.d_model))(pos_vec)
+        x = x + pe[:, None, :].astype(x.dtype)
 
         def body(carry, xs):
             p, ck, cv, xk, xv = xs

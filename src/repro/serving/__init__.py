@@ -1,3 +1,5 @@
-"""Serving substrate: batched prefill/decode engine with KV/SSM caches."""
+"""Serving substrate: batched prefill/decode engine with KV/SSM caches,
+plus the request-batched multi-device solve service."""
 
 from repro.serving.engine import ServeEngine
+from repro.serving.solve_service import SolveService

@@ -105,12 +105,14 @@ class ServeEngine:
         for s, req in enumerate(self.active):
             if req is not None and req.out:
                 toks[s, 0] = req.out[-1]
-        # uniform pos across slots is required by the single-scalar decode
-        # signature; per-slot positions use the max and masked attention is
-        # handled by each slot's own history (unused slots ignored).
-        pos = int(self.pos[[i for i, r in enumerate(self.active) if r is not None]].max())
+        # per-slot position vector: after a mid-stream admit slots run at
+        # staggered lengths, and every slot must write its KV/state cache
+        # row at its OWN position (a collapsed max(pos) would land
+        # lagging slots' rows at the wrong index and skew their rotary
+        # phase).  decode_step accepts the (B,) form directly.
         logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), jnp.asarray(pos, jnp.int32), self.cache)
+            self.params, jnp.asarray(toks),
+            jnp.asarray(self.pos, jnp.int32), self.cache)
         nxt = self._sample(logits)
         for s, req in enumerate(self.active):
             if req is None:

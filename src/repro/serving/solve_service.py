@@ -1,0 +1,463 @@
+"""Request-batched, multi-device solve service.
+
+The paper's throughput claim is a *serving* story: a fixed analog array
+solves a stream of independent SPD systems at a complexity independent
+of matrix size.  This module is the front-end that turns a stream of
+heterogeneous requests (different ``n``, different methods, different
+settle options) into the homogeneous shared-stamp-pattern batches the
+batched engine (:func:`repro.core.solver.solve_batch`) is fast at:
+
+* **submit** — requests are queued, not solved.  Each carries its
+  system, the solve method (analog designs or digital baselines) and
+  the option signature that decides batch compatibility.
+* **bucket** — queued requests are grouped by
+  ``(n_padded, method, option signature)``.  ``n_padded`` comes from a
+  small padding grid, so a mixed-size stream collapses onto a few
+  device shapes instead of one jit compile per distinct ``n``.
+* **pad** — a request of size ``n`` inside an ``n_pad`` bucket is
+  identity-extended: ``A_pad = blockdiag(A, g_pad I)`` with ``g_pad``
+  the mean diagonal conductance of ``A`` (keeps the padding in-scale
+  and SPD), ``b_pad = g_pad * PAD_SOLUTION_V`` on the pad entries.  The
+  pad rows are decoupled from the real system, diagonally dominant
+  (fully passive in the 2n design — no extra amps) and, because their
+  RHS is nonzero, carry a supply leg to the rail — the padded circuit
+  is never floating, so the DC operator stays regular.  The known pad
+  solution (``PAD_SOLUTION_V``) is masked back out of every result.
+* **dispatch** — each bucket runs through a cached pipeline: one stamp
+  pattern per bucket, reused across micro-batches (re-merged only if a
+  later micro-batch stamps a cell slot the cached pattern lacks), with
+  fixed ``(batch_slots, n_pad)`` device shapes so jit caches are hit
+  across micro-batches, and the batch axis sharded over a 1-d solver
+  mesh (:func:`repro.distributed.sharding.solver_mesh`) when one is
+  given.
+
+Single-host caveats (see ROADMAP): netlist building and result
+unpacking stay host-side; the settle sweep's Pallas kernels run
+unsharded; preliminary-design (``analog_n``) buckets re-derive their
+union pattern per micro-batch because that design's slot set is
+data-dependent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.operating_point import NonIdealities
+from repro.core.solver import (
+    ANALOG_METHODS,
+    DIGITAL_METHODS,
+    SolveResult,
+    _build_nets,
+    solve_batch,
+)
+from repro.core.specs import DEFAULT_PARAMS, OPAMPS, CircuitParams, OpAmpSpec
+
+# nominal voltage of padded unknowns; in-range for the paper's
+# x ~ U[-0.5, 0.5] V protocol, nonzero so pad nodes keep a supply leg
+PAD_SOLUTION_V = 0.1
+
+# default padding grid; sizes beyond the grid round up to PAD_QUANTUM
+DEFAULT_PAD_SIZES = (8, 16, 32, 48, 64, 96, 128, 192, 256)
+PAD_QUANTUM = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveSignature:
+    """The option tuple that decides batch compatibility.
+
+    Two requests may share a device batch iff their signatures are
+    equal — every field below changes either the stamped circuit, the
+    solver semantics, or the settle pipeline.  ``opamp`` is the full
+    (frozen, hashable) spec, so custom parts bucket separately from
+    registry parts even under a shared name.
+    """
+
+    method: str
+    opamp: OpAmpSpec
+    d_policy: str = "proposed"
+    beta: float = 0.5
+    alpha: float = 1.0
+    compute_settling: bool = False
+    settle_method: str = "auto"
+    settle_max_steps: int = 200_000
+    settle_dt_policy: str = "diag"
+    tol: float = 1e-10
+    max_iter: int = 10000
+    nonideal: NonIdealities | None = None
+
+    def normalized(self) -> "SolveSignature":
+        """Reset every field the dispatched solver ignores to its
+        default, so requests differing only in irrelevant options still
+        share a bucket (a digital request's opamp, an analog request's
+        CG tolerance, settle options without ``compute_settling``...).
+        """
+        changes: dict[str, Any] = {}
+        if self.method in DIGITAL_METHODS:
+            # no circuit is stamped and nothing settles
+            changes.update(
+                opamp=OPAMPS["AD712"], nonideal=None, d_policy="proposed",
+                beta=0.5, alpha=1.0, compute_settling=False,
+            )
+            if self.method == "cholesky":    # direct: no iteration knobs
+                changes.update(tol=1e-10, max_iter=10000)
+        else:
+            changes.update(tol=1e-10, max_iter=10000)
+            if self.method == "analog_n":
+                # the preliminary builder takes only (a, b, params)
+                changes.update(d_policy="proposed", beta=0.5, alpha=1.0)
+        if not (self.compute_settling and self.method in ANALOG_METHODS):
+            changes.update(
+                settle_method="auto", settle_max_steps=200_000,
+                settle_dt_policy="diag",
+            )
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass
+class SolveTicket:
+    """One queued request; ``result`` is filled by :meth:`SolveService.drain`."""
+
+    rid: int
+    a: np.ndarray
+    b: np.ndarray
+    sig: SolveSignature
+    result: SolveResult | None = None
+
+    @property
+    def n(self) -> int:
+        return self.a.shape[0]
+
+
+@dataclasses.dataclass
+class _BucketPipeline:
+    """Cached per-bucket dispatch state."""
+
+    n_pad: int
+    sig: SolveSignature
+    pattern: engine.StampPattern | None = None
+    micro_batches: int = 0
+    systems: int = 0
+    fill_slots: int = 0
+    pattern_rebuilds: int = 0
+
+
+def pad_system(
+    a: np.ndarray, b: np.ndarray, n_pad: int, *, rhs: str = "supply"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Identity-extend ``(A, b)`` to ``n_pad`` unknowns.
+
+    The pad block is ``g_pad I`` with ``g_pad = mean(diag(A))`` —
+    decoupled, SPD and in-conductance-scale.  The pad RHS depends on
+    the consumer:
+
+    * ``rhs="supply"`` (the analog designs): ``g_pad * PAD_SOLUTION_V``
+      — nonzero, so every pad node carries a supply leg to the rail and
+      the padded circuit's DC operator is never singular.  Pad solution
+      ``PAD_SOLUTION_V``.
+    * ``rhs="zero"`` (the digital baselines): zero-extension.  There is
+      no circuit to keep connected, and a nonzero pad RHS would inflate
+      ``||b||`` and *dilute the iterative solvers' relative-residual
+      stopping test* — zero pad entries keep CG/Jacobi iterate
+      sequences on the real block identical to the unpadded solve
+      (zero initial residual on a decoupled block stays zero).
+    """
+    n = a.shape[0]
+    if n == n_pad:
+        return a, b
+    if n > n_pad:
+        raise ValueError(f"system of size {n} cannot pad to {n_pad}")
+    g_pad = float(np.mean(np.diagonal(a)))
+    a_pad = np.zeros((n_pad, n_pad), dtype=np.float64)
+    a_pad[:n, :n] = a
+    a_pad[np.arange(n, n_pad), np.arange(n, n_pad)] = g_pad
+    fill = g_pad * PAD_SOLUTION_V if rhs == "supply" else 0.0
+    b_pad = np.full(n_pad, fill, dtype=np.float64)
+    b_pad[:n] = b
+    return a_pad, b_pad
+
+
+class SolveService:
+    """Queue -> bucket -> pad -> batched sharded dispatch.
+
+    Parameters
+    ----------
+    batch_slots:
+        Systems per device micro-batch.  Fixed: partial buckets are
+        filled by repeating the last system (counted in ``stats``), so
+        every bucket compiles exactly one ``(batch_slots, n_pad)``
+        pipeline.  Rounded up to a multiple of the mesh's device count.
+    mesh / n_devices:
+        Optional 1-d solver mesh (or a device count to build one) — the
+        micro-batch batch axis is sharded over it.
+    pad_sizes:
+        The bucketing grid for ``n``; off-grid sizes round up to the
+        next multiple of ``PAD_QUANTUM``.
+    """
+
+    def __init__(
+        self,
+        *,
+        batch_slots: int = 8,
+        mesh=None,
+        n_devices: int | None = None,
+        pad_sizes: tuple[int, ...] = DEFAULT_PAD_SIZES,
+        params: CircuitParams = DEFAULT_PARAMS,
+    ):
+        if mesh is None and n_devices is not None:
+            from repro.distributed.sharding import solver_mesh
+
+            mesh = solver_mesh(n_devices)
+        self.mesh = mesh
+        n_dev = int(mesh.devices.size) if mesh is not None else 1
+        # fixed shapes + even device division: one jit per bucket
+        self.batch_slots = max(batch_slots, n_dev)
+        self.batch_slots += (-self.batch_slots) % n_dev
+        self.pad_sizes = tuple(sorted(pad_sizes))
+        self.params = params
+        self.queue: list[SolveTicket] = []
+        self._pipelines: dict[tuple, _BucketPipeline] = {}
+        self._next_rid = 0
+        self._wall_s = 0.0
+        self._real_sq = 0.0      # sum n^2 over served systems (stats)
+
+    # ------------------------------------------------------------ intake
+    def pad_to(self, n: int) -> int:
+        for size in self.pad_sizes:
+            if n <= size:
+                return size
+        return n + (-n) % PAD_QUANTUM
+
+    def _bucket_n(self, ticket: SolveTicket) -> int:
+        """The bucket size for one request.
+
+        Settling requests bucket at their *exact* size: settling time
+        is a global circuit property, and the 0.1 V pad-node transients
+        would otherwise be measured along with the requested system's
+        (solutions un-pad cleanly; settle metrics do not).  Everything
+        else lands on the padding grid.
+        """
+        if ticket.sig.compute_settling:
+            return ticket.n
+        return self.pad_to(ticket.n)
+
+    def submit(
+        self,
+        a,
+        b,
+        *,
+        method: str = "analog_2n",
+        opamp: str | OpAmpSpec = "AD712",
+        nonideal: NonIdealities | None = None,
+        d_policy: str = "proposed",
+        beta: float = 0.5,
+        alpha: float = 1.0,
+        compute_settling: bool = False,
+        settle_method: str = "auto",
+        settle_max_steps: int = 200_000,
+        settle_dt_policy: str = "diag",
+        tol: float = 1e-10,
+        max_iter: int = 10000,
+    ) -> int:
+        """Queue one system; returns the request id.
+
+        Nothing is solved until :meth:`drain` — submission only
+        validates shapes and records the batch-compatibility signature.
+        """
+        a = np.asarray(a, dtype=np.float64)
+        b = np.asarray(b, dtype=np.float64)
+        if a.ndim != 2 or a.shape[0] != a.shape[1] or b.shape != (a.shape[0],):
+            raise ValueError(f"expected (n, n) and (n,); got {a.shape}, {b.shape}")
+        if method not in ANALOG_METHODS + DIGITAL_METHODS:
+            raise ValueError(
+                f"unknown method {method!r}: expected one of "
+                f"{ANALOG_METHODS + DIGITAL_METHODS}"
+            )
+        if isinstance(opamp, str):
+            if opamp not in OPAMPS:
+                raise ValueError(f"unknown opamp {opamp!r}")
+            opamp = OPAMPS[opamp]
+        sig = SolveSignature(
+            method=method,
+            opamp=opamp,
+            d_policy=d_policy,
+            beta=beta,
+            alpha=alpha,
+            compute_settling=compute_settling,
+            settle_method=settle_method,
+            settle_max_steps=settle_max_steps,
+            settle_dt_policy=settle_dt_policy,
+            tol=tol,
+            max_iter=max_iter,
+            nonideal=nonideal,
+        ).normalized()
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(SolveTicket(rid=rid, a=a, b=b, sig=sig))
+        return rid
+
+    # ---------------------------------------------------------- dispatch
+    def _bucket_key(self, ticket: SolveTicket) -> tuple:
+        return (self._bucket_n(ticket), ticket.sig)
+
+    def _bucket_pattern(
+        self,
+        pipe: _BucketPipeline,
+        a_pad: np.ndarray,
+        b_pad: np.ndarray,
+    ) -> tuple[engine.StampPattern | None, list | None]:
+        """The bucket's cached stamp pattern, re-merged only on a miss.
+
+        ``analog_2n`` slot sets are normalized per ``(n, design)`` (all
+        pair slots + the union of observed ground slots), so after the
+        first micro-batch this is a pure cache read.  ``analog_n`` slot
+        sets are data-dependent — those buckets return ``(None, None)``
+        and let ``solve_batch`` derive the per-micro-batch union.
+
+        The netlists built for the cover check are returned and handed
+        to ``solve_batch`` so each micro-batch builds them exactly once.
+        """
+        sig = pipe.sig
+        if sig.method != "analog_2n":
+            return None, None
+        nets = _build_nets(
+            a_pad, b_pad, sig.method, d_policy=sig.d_policy,
+            beta=sig.beta, alpha=sig.alpha, params=self.params,
+        )
+        if pipe.pattern is not None and engine.pattern_covers(pipe.pattern, nets):
+            return pipe.pattern, nets
+        union = engine.pattern_union(nets, sig.opamp)
+        if pipe.pattern is None:
+            pipe.pattern = union
+        else:
+            pipe.pattern = engine.pattern_merge(pipe.pattern, union)
+            pipe.pattern_rebuilds += 1
+        return pipe.pattern, nets
+
+    def _dispatch_micro_batch(
+        self, pipe: _BucketPipeline, tickets: list[SolveTicket]
+    ) -> None:
+        sig = pipe.sig
+        n_real = len(tickets)
+        fill = self.batch_slots - n_real
+        rhs = "zero" if sig.method in DIGITAL_METHODS else "supply"
+        padded = [pad_system(t.a, t.b, pipe.n_pad, rhs=rhs) for t in tickets]
+        padded += [padded[-1]] * fill          # repeat-fill to fixed shape
+        a_stack = np.stack([p[0] for p in padded])
+        b_stack = np.stack([p[1] for p in padded])
+
+        pattern, nets = self._bucket_pattern(pipe, a_stack, b_stack)
+        batch = solve_batch(
+            a_stack,
+            b_stack,
+            method=sig.method,
+            opamp=sig.opamp,
+            nonideal=sig.nonideal,
+            nets=nets,
+            d_policy=sig.d_policy,
+            beta=sig.beta,
+            alpha=sig.alpha,
+            compute_settling=sig.compute_settling,
+            settle_method=sig.settle_method,
+            settle_max_steps=sig.settle_max_steps,
+            settle_dt_policy=sig.settle_dt_policy,
+            tol=sig.tol,
+            max_iter=sig.max_iter,
+            pattern=pattern,
+            mesh=self.mesh,
+        )
+        for k, ticket in enumerate(tickets):
+            res = batch[k]
+            res.x = res.x[: ticket.n]           # mask the pad solution out
+            res.info["service_n_padded"] = pipe.n_pad
+            res.info["service_batch_slots"] = self.batch_slots
+            ticket.result = res
+            self._real_sq += float(ticket.n) ** 2
+        pipe.micro_batches += 1
+        pipe.systems += n_real
+        pipe.fill_slots += fill
+
+    def drain(self) -> dict[int, SolveResult]:
+        """Solve everything queued; returns ``{rid: SolveResult}``.
+
+        Buckets run in arrival order of their first request; within a
+        bucket, micro-batches of ``batch_slots`` systems dispatch
+        through the bucket's cached pipeline.  Results are handed to
+        the caller and not retained by the service (a long-running
+        stream must not accumulate solved systems).  If one micro-batch
+        raises (e.g. a system violating the transform's guarantee),
+        every not-yet-dispatched request stays queued for the next
+        ``drain`` instead of being silently discarded.
+        """
+        t0 = time.perf_counter()
+        queued = self.queue
+        self.queue = []
+        buckets: dict[tuple, list[SolveTicket]] = {}
+        for ticket in queued:
+            buckets.setdefault(self._bucket_key(ticket), []).append(ticket)
+
+        out: dict[int, SolveResult] = {}
+        try:
+            for key, tickets in buckets.items():
+                n_pad, sig = key
+                pipe = self._pipelines.setdefault(
+                    key, _BucketPipeline(n_pad=n_pad, sig=sig)
+                )
+                for start in range(0, len(tickets), self.batch_slots):
+                    chunk = tickets[start:start + self.batch_slots]
+                    self._dispatch_micro_batch(pipe, chunk)
+                    for t in chunk:
+                        out[t.rid] = t.result
+        except BaseException:
+            # the caller receives nothing from a raising drain, so put
+            # EVERY ticket of this drain back (already-served ones just
+            # recompute next time) — nothing is silently discarded
+            self.queue = list(queued) + self.queue
+            self._wall_s += time.perf_counter() - t0
+            raise
+        self._wall_s += time.perf_counter() - t0
+        return out
+
+    # ------------------------------------------------------------- stats
+    @property
+    def stats(self) -> dict[str, Any]:
+        """Service counters: per-bucket fills and the pad-overhead model.
+
+        ``pad_overhead`` is the dense-work ratio
+        ``sum((systems + fill_slots) * n_pad^2) / sum(n^2)``: assembly
+        and DC-solve cost scale with the *padded* size, over every
+        dispatched slot including the repeat-fills — the full price
+        paid for shape-stable pipelines.
+        """
+        per_bucket = {}
+        pad_sq = 0.0
+        total = fills = 0
+        for (n_pad, sig), pipe in self._pipelines.items():
+            base = key = f"n{n_pad}/{sig.method}"
+            suffix = 2
+            while key in per_bucket:     # same (n_pad, method), other sig
+                key = f"{base}#{suffix}"
+                suffix += 1
+            per_bucket[key] = {
+                "micro_batches": pipe.micro_batches,
+                "systems": pipe.systems,
+                "fill_slots": pipe.fill_slots,
+                "pattern_rebuilds": pipe.pattern_rebuilds,
+            }
+            total += pipe.systems
+            fills += pipe.fill_slots
+            pad_sq += (pipe.systems + pipe.fill_slots) * float(n_pad) ** 2
+        real_sq = self._real_sq
+        return {
+            "requests": total,
+            "fill_slots": fills,
+            "buckets": per_bucket,
+            "pad_overhead": pad_sq / real_sq if real_sq else 1.0,
+            "wall_s": self._wall_s,
+            "devices": int(self.mesh.devices.size) if self.mesh is not None else 1,
+            "batch_slots": self.batch_slots,
+        }
