@@ -17,13 +17,21 @@ dense operators cannot reach), the dense-vs-ELL speedup at the largest
 dense-feasible size, and the parity-guard verdict.  Future PRs regress
 against this file.
 
-The ``service`` phase (gate with ``--pr5`` / ``--no-pr5``; default
-mirrors the pr2 gate) runs the request-batched solve service over the
-mixed-size stream and writes its throughput/parity baseline to
-``BENCH_pr5.json`` (``--json-pr5`` to relocate); the dedicated
-multi-device sweep lives in ``benchmarks.solve_service``.
+The ``service`` phase (gate with ``--service`` / ``--no-service``;
+default mirrors the pr2 gate) runs the streamed solve-service
+benchmark — slot sweep, device-stream sweep, overlap probe — and
+writes its throughput/parity baseline to ``BENCH_pr6.json``
+(``--json-service`` to relocate).  ``--baseline PATH`` additionally
+diffs that document against a committed ``BENCH_pr5.json`` /
+``BENCH_pr6.json`` and fails the run on a >25% regression of
+requests/sec, pad overhead or sweep wall time (the device-scaling
+monotonicity check runs whether or not a baseline file is given);
+``--smoke`` shrinks the service stream to the CI-sized pass.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python -m benchmarks.run --only none \
+        --service --smoke --json-service "" --baseline BENCH_pr6.json
 """
 
 from __future__ import annotations
@@ -34,25 +42,6 @@ import sys
 import time
 
 BENCH_SCHEMA = "bench_pr2.v1"
-BENCH_PR5_SCHEMA = "bench_pr5.v1"
-
-
-def _pr5_service(full: bool) -> dict:
-    """The PR-5 serving baseline: bucketed request-batched throughput.
-
-    Single-host here (the forced-multi-device sweep is the dedicated
-    ``benchmarks.solve_service`` CLI / CI job); records requests/sec,
-    pad overhead and the per-request parity verdict at two slot counts.
-    """
-    from benchmarks.solve_service import build_stream, run_service
-
-    systems = build_stream(0, 2 if full else 1)
-    out: dict = {}
-    t0 = time.time()
-    out["slot2"] = run_service(systems, batch_slots=2)
-    out["slot4"] = run_service(systems, batch_slots=4)
-    out["service_wall_s"] = time.time() - t0
-    return out
 
 
 def _pr2_trajectory(full: bool) -> dict:
@@ -83,12 +72,20 @@ def main() -> None:
                     help="run the PR-2 perf trajectory (sparse n-sweep, "
                          "dense-vs-ELL, parity); default: only on "
                          "unfiltered runs")
-    ap.add_argument("--json-pr5", default="BENCH_pr5.json",
+    ap.add_argument("--json-service", default="BENCH_pr6.json",
                     help="solve-service baseline output path ('' to skip)")
-    ap.add_argument("--pr5", default=None, action=argparse.BooleanOptionalAction,
-                    help="run the solve-service phase (bucketed "
-                         "request-batched throughput + parity); default: "
-                         "only on unfiltered runs")
+    ap.add_argument("--service", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="run the solve-service phase (streamed "
+                         "throughput sweeps + parity); default: only on "
+                         "unfiltered runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized service stream (full mix, 1 repeat)")
+    ap.add_argument("--baseline", default=None, nargs="?", const="auto",
+                    help="gate the service phase against a committed "
+                         "BENCH_*.json (>25%% regression fails); bare "
+                         "--baseline picks BENCH_pr6.json, falling back "
+                         "to BENCH_pr5.json")
     args = ap.parse_args()
 
     from benchmarks.common import emit
@@ -134,32 +131,36 @@ def main() -> None:
             print("bench_json,parity,FAIL", file=sys.stderr)
             raise SystemExit(1)
 
-    want_pr5 = args.pr5 if args.pr5 is not None else not only
-    if want_pr5:
-        import jax
+    want_service = args.service if args.service is not None else not only
+    if want_service:
+        import os
+
+        from benchmarks.solve_service import apply_gate, build_doc
 
         t5 = time.time()
-        doc5 = {
-            "schema": BENCH_PR5_SCHEMA,
-            "backend": jax.default_backend(),
-            "jax_version": jax.__version__,
-            "full": bool(args.full),
-            "n_devices_visible": len(jax.devices()),
-            **_pr5_service(args.full),
-        }
+        doc_svc = build_doc(smoke=bool(args.smoke or not args.full))
         print(f"service,wall_s,{time.time() - t5:.1f}")
-        failures = [
-            f
-            for key in ("slot2", "slot4")
-            for f in doc5[key]["parity_failures"]
-        ]
-        if args.json_pr5:
-            with open(args.json_pr5, "w") as fh:
-                json.dump(doc5, fh, indent=2, sort_keys=True, default=str)
-            print(f"bench_json,path,{args.json_pr5}")
-        if failures:
-            print("bench_json,service_parity,FAIL", file=sys.stderr)
+        if args.json_service:
+            with open(args.json_service, "w") as fh:
+                json.dump(doc_svc, fh, indent=2, sort_keys=True, default=str)
+            print(f"bench_json,path,{args.json_service}")
+        baseline_path = args.baseline or ""
+        if baseline_path == "auto":
+            baseline_path = next(
+                (p for p in ("BENCH_pr6.json", "BENCH_pr5.json")
+                 if os.path.exists(p)), "",
+            )
+            if baseline_path:
+                print(f"service,baseline_file,{baseline_path}")
+        violations = apply_gate(doc_svc, baseline_path)
+        for v in violations:
+            print(f"service,regression,{v['metric']}: "
+                  f"{v['current']:.4g} vs baseline {v['baseline']:.4g}",
+                  file=sys.stderr)
+        if doc_svc["parity_failures"] or violations:
+            print("bench_json,service_gate,FAIL", file=sys.stderr)
             raise SystemExit(1)
+        print("bench_json,service_gate,OK")
     print(f"total,wall_s,{time.time() - t0:.1f}")
 
 

@@ -1,20 +1,47 @@
-"""Solve-service throughput benchmark (the PR-5 serving baseline).
+"""Solve-service throughput benchmark (the PR-6 streaming service).
 
 Streams a mixed-size request set (n in {16, 64, 192}, both analog
 designs plus a digital baseline) through :class:`repro.serving.SolveService`
-and records requests/sec versus batch-slot count and device count into
-``BENCH_pr5.json``.  Every request's solution is checked against a
-direct :func:`repro.core.solver.solve` — any mismatch beyond tolerance
-is a benchmark *failure* (nonzero exit), which is how the CI
-forced-multi-device smoke job guards the sharded dispatch path.
+and records steady-state requests/sec versus batch-slot count and
+device-stream count into ``BENCH_pr6.json``.  Every request's solution
+is checked against a direct :func:`repro.core.solver.solve` — any
+mismatch beyond tolerance is a benchmark *failure* (nonzero exit),
+which is how the CI forced-multi-device smoke job guards the streamed
+dispatch path.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src:. python -m benchmarks.solve_service --smoke
 
-``--smoke`` shrinks the stream (CI wall-clock) but keeps the full
-size/method mix and the >= 2-device sweep point.  The analog_n design
-rides at n=16 only: its preliminary netlist carries O(n^2) cells, so
-larger sizes belong to the 2n design by construction (Table 2).
+Measurement protocol (v2):
+
+* every ``run_service`` point runs the stream TWICE on one service —
+  an untimed warmup pass compiles each bucket's executable on each
+  device it streams to (per-device placement means per-device
+  executables), then the timed pass measures the steady state the
+  serving story is about.  The v1 numbers timed first-pass compiles.
+* the ``device_sweep`` scales the round-robin stream count
+  (``n_devices=1, 2, all``) with whole micro-batches per device — the
+  GSPMD within-micro-batch sharding whose measured scaling *inverted*
+  (BENCH_pr5.json: 15.2 -> 3.5 -> 0.67 req/s at 1 -> 2 -> 8) is gone.
+  The gate checks requests/sec is non-decreasing in the stream count.
+* the ``overlap_probe`` compares ``inflight_per_device=1`` (serial
+  build -> solve -> unpack) against ``2`` (double-buffered) on one
+  device — the host-build/device-solve overlap in isolation.
+* each point reports the wall-clock split from ``SolveService.stats``
+  (``host_build_s`` / ``device_wait_s`` / ``unpack_s``, timed pass
+  only): on a saturated stream ``device_wait_s`` is the device time
+  the overlapped host phases could not hide.
+
+``--baseline BENCH_pr5.json`` (or a prior ``BENCH_pr6.json``) gates
+the run against a committed baseline: >25% regression on
+requests/sec, pad overhead or sweep wall time fails the run.
+Absolute series compare only between runs of the same ``--smoke``
+context; the dimensionless device-scaling curve and overlap speedup
+always compare.  ``--smoke`` shrinks the stream (CI wall-clock) but
+keeps the full size/method mix and the >= 2-device sweep point.  The
+analog_n design rides at n=16 only: its preliminary netlist carries
+O(n^2) cells, so larger sizes belong to the 2n design by construction
+(Table 2).
 """
 
 from __future__ import annotations
@@ -26,7 +53,11 @@ import time
 import numpy as np
 
 PARITY_ATOL = 1e-9
-BENCH_SCHEMA = "bench_pr5.v1"
+BENCH_SCHEMA = "bench_pr6.v1"
+# baseline gate: fail on >25% regression of any compared series
+REGRESSION_TOL = 0.25
+# device-scaling monotonicity: allow this much timing noise per step
+SCALING_DIP_TOL = 0.08
 
 
 def build_stream(seed: int, repeat: int) -> list[dict]:
@@ -54,12 +85,36 @@ def build_stream(seed: int, repeat: int) -> list[dict]:
     return out
 
 
-def run_service(systems: list[dict], *, batch_slots: int, mesh=None) -> dict:
-    """One service pass; returns throughput + parity stats."""
+def run_service(
+    systems: list[dict],
+    *,
+    batch_slots: int,
+    n_devices: int = 1,
+    inflight: int = 2,
+    warmup: bool = True,
+    check_parity: bool = True,
+) -> dict:
+    """One steady-state service pass; returns throughput + parity stats.
+
+    ``warmup=True`` first streams the whole request set untimed through
+    the same service so every (bucket, device) executable is compiled;
+    the timed pass then measures serving, not compilation.  The
+    round-robin assignment is deterministic, so the warmup pass touches
+    exactly the (bucket, device) pairs the timed pass uses.
+    """
     from repro.core.solver import solve
     from repro.serving.solve_service import SolveService
 
-    svc = SolveService(batch_slots=batch_slots, mesh=mesh)
+    svc = SolveService(
+        batch_slots=batch_slots,
+        n_devices=n_devices,
+        inflight_per_device=inflight,
+    )
+    if warmup:
+        for s in systems:
+            svc.submit(s["a"], s["b"], method=s["method"])
+        svc.drain()
+    base = svc.stats
     rids = [svc.submit(s["a"], s["b"], method=s["method"]) for s in systems]
     t0 = time.perf_counter()
     results = svc.drain()
@@ -67,96 +122,290 @@ def run_service(systems: list[dict], *, batch_slots: int, mesh=None) -> dict:
 
     worst = 0.0
     failures = []
-    for rid, s in zip(rids, systems):
-        direct = solve(s["a"], s["b"], method=s["method"])
-        err = float(np.abs(results[rid].x - direct.x).max())
-        worst = max(worst, err)
-        if err > PARITY_ATOL:
-            failures.append(
-                {"rid": rid, "n": s["n"], "method": s["method"], "err": err}
-            )
+    if check_parity:
+        for rid, s in zip(rids, systems):
+            direct = solve(s["a"], s["b"], method=s["method"])
+            err = float(np.abs(results[rid].x - direct.x).max())
+            worst = max(worst, err)
+            if err > PARITY_ATOL:
+                failures.append(
+                    {"rid": rid, "n": s["n"], "method": s["method"],
+                     "err": err}
+                )
     stats = svc.stats
     return {
         "requests": len(systems),
         "batch_slots": stats["batch_slots"],
         "devices": stats["devices"],
+        "inflight_per_device": stats["inflight_per_device"],
+        "warmup": bool(warmup),
         "wall_s": wall,
         "requests_per_s": len(systems) / wall,
         "pad_overhead": stats["pad_overhead"],
         "fill_slots": stats["fill_slots"],
+        # timed-pass decomposition (warmup accumulation subtracted)
+        "host_build_s": stats["host_build_s"] - base["host_build_s"],
+        "device_wait_s": stats["device_wait_s"] - base["device_wait_s"],
+        "unpack_s": stats["unpack_s"] - base["unpack_s"],
+        "pattern_derivations": sum(
+            b["pattern_derivations"] for b in stats["buckets"].values()
+        ),
         "parity_worst": worst,
         "parity_failures": failures,
     }
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="reduced stream for CI wall-clock")
-    ap.add_argument("--json", default="BENCH_pr5.json",
-                    help="output path ('' to skip)")
-    ap.add_argument("--slots", default="",
-                    help="comma-separated slot counts (default by mode)")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def build_doc(
+    *, smoke: bool, seed: int = 0, slots: str = "", repeats: int = 3
+) -> dict:
+    """Run the full benchmark (slot sweep, device sweep, overlap probe)
+    and return the ``bench_pr6.v1`` document.  Shared by this CLI and
+    the ``benchmarks.run`` service phase.
 
+    Each point is best-of-``repeats``: repeat 1 pays warmup + the
+    per-request parity audit, later repeats re-measure the already-hot
+    pipeline (the jit cache is process-global, so neither warmup nor
+    re-auditing is needed) and the point reports the best throughput
+    with every sample recorded — single-sample timing noise on a
+    loaded host is larger than the effects the device sweep resolves.
+    """
     import jax
 
     n_dev = len(jax.devices())
-    repeat = 1 if args.smoke else 4
-    systems = build_stream(args.seed, repeat)
-    if args.slots:
-        slot_sweep = [int(s) for s in args.slots.split(",")]
+    repeat = 1 if smoke else 4
+    systems = build_stream(seed, repeat)
+    if slots:
+        slot_sweep = [int(s) for s in slots.split(",")]
     else:
-        slot_sweep = [2, 4] if args.smoke else [1, 2, 4, 8]
+        slot_sweep = [2, 4] if smoke else [1, 2, 4, 8]
+
+    def measure(**kw) -> dict:
+        point = run_service(systems, **kw)
+        samples = [point["requests_per_s"]]
+        for _ in range(max(0, repeats - 1)):
+            again = run_service(
+                systems, warmup=False, check_parity=False, **kw
+            )
+            samples.append(again["requests_per_s"])
+            if again["requests_per_s"] > point["requests_per_s"]:
+                for k in ("wall_s", "requests_per_s", "host_build_s",
+                          "device_wait_s", "unpack_s"):
+                    point[k] = again[k]
+        point["samples_requests_per_s"] = samples
+        return point
 
     doc: dict = {
         "schema": BENCH_SCHEMA,
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
-        "smoke": bool(args.smoke),
+        "smoke": bool(smoke),
         "n_devices_visible": n_dev,
         "stream": sorted({(s["n"], s["method"]) for s in systems}),
         "slot_sweep": [],
         "device_sweep": [],
     }
 
-    print("sweep,slots,devices,requests_per_s,parity_worst")
-    for slots in slot_sweep:
-        r = run_service(systems, batch_slots=slots)
-        doc["slot_sweep"].append(r)
-        print(f"slots,{r['batch_slots']},{r['devices']},"
+    print("sweep,slots,devices,inflight,requests_per_s,parity_worst")
+
+    def emit(kind, r):
+        print(f"{kind},{r['batch_slots']},{r['devices']},"
+              f"{r['inflight_per_device']},"
               f"{r['requests_per_s']:.3f},{r['parity_worst']:.3g}")
+
+    for slots_n in slot_sweep:
+        r = measure(batch_slots=slots_n)
+        doc["slot_sweep"].append(r)
+        emit("slots", r)
 
     # device sweep at the largest slot count; the >= 2-device point is
-    # the sharded-dispatch guard (CI forces 8 host devices)
-    from repro.distributed.sharding import solver_mesh
-
+    # the streamed-dispatch guard (CI forces 8 host devices)
     dev_sweep = sorted({1, n_dev} | ({2} if n_dev >= 2 else set()))
     for dev in dev_sweep:
-        mesh = solver_mesh(dev) if dev > 1 else None
-        r = run_service(systems, batch_slots=max(slot_sweep), mesh=mesh)
+        r = measure(batch_slots=max(slot_sweep), n_devices=dev)
         doc["device_sweep"].append(r)
-        print(f"devices,{r['batch_slots']},{r['devices']},"
-              f"{r['requests_per_s']:.3f},{r['parity_worst']:.3g}")
+        emit("devices", r)
 
-    failures = [
+    # host-build/device-solve overlap in isolation: serial vs
+    # double-buffered dispatch on ONE stream
+    serial = measure(
+        batch_slots=max(slot_sweep), n_devices=1, inflight=1
+    )
+    overlapped = measure(
+        batch_slots=max(slot_sweep), n_devices=1, inflight=2
+    )
+    emit("overlap", serial)
+    emit("overlap", overlapped)
+    doc["overlap_probe"] = {
+        "serial": serial,
+        "overlapped": overlapped,
+        "overlap_speedup": (
+            overlapped["requests_per_s"] / serial["requests_per_s"]
+        ),
+    }
+
+    doc["parity_failures"] = [
         f
-        for r in doc["slot_sweep"] + doc["device_sweep"]
+        for r in (doc["slot_sweep"] + doc["device_sweep"]
+                  + [serial, overlapped])
         for f in r["parity_failures"]
     ]
-    doc["parity_failures"] = failures
-    doc["sharded_point_ran"] = any(
+    doc["streamed_point_ran"] = any(
         r["devices"] >= 2 for r in doc["device_sweep"]
     )
+    return doc
+
+
+# ------------------------------------------------------- baseline gate
+def extract_series(doc: dict) -> tuple[dict, dict]:
+    """Named scalar series for the baseline gate.
+
+    Returns ``(contextual, free)``: *contextual* series are absolute
+    (requests/sec, pad overhead, sweep wall) and only comparable
+    between runs of the same stream context (same ``smoke`` flag);
+    *free* series are dimensionless ratios (device scaling, overlap
+    speedup) comparable across contexts.  Understands both the
+    ``bench_pr5.v1`` and ``bench_pr6.v1`` document shapes.
+    """
+    ctx: dict[str, float] = {}
+    free: dict[str, float] = {}
+    sweep = doc.get("device_sweep") or []
+    rps1 = None
+    wall = 0.0
+    for r in sweep:
+        d = r["devices"]
+        ctx[f"requests_per_s@dev{d}"] = float(r["requests_per_s"])
+        ctx[f"pad_overhead@dev{d}"] = float(r["pad_overhead"])
+        wall += float(r["wall_s"])
+        if d == 1:
+            rps1 = float(r["requests_per_s"])
+    if sweep:
+        ctx["sweep_wall_s"] = wall
+    if rps1:
+        for r in sweep:
+            free[f"scaling@dev{r['devices']}"] = (
+                float(r["requests_per_s"]) / rps1
+            )
+    probe = doc.get("overlap_probe")
+    if probe:
+        free["overlap_speedup"] = float(probe["overlap_speedup"])
+    return ctx, free
+
+
+def compare_to_baseline(
+    current: dict, baseline: dict, *, tol: float = REGRESSION_TOL
+) -> list[dict]:
+    """Gate the current run against a committed baseline document.
+
+    Returns the violations (empty = pass).  Lower-is-worse metrics
+    (requests/sec, scaling, overlap speedup) fail when current drops
+    below ``(1 - tol) x baseline``; higher-is-worse (pad overhead,
+    sweep wall) fail when current exceeds ``(1 + tol) x baseline``.
+    Absolute series are skipped when the two documents ran different
+    stream contexts (``smoke`` mismatch) — the dimensionless series
+    still gate.
+    """
+    cur_ctx, cur_free = extract_series(current)
+    base_ctx, base_free = extract_series(baseline)
+    same_ctx = bool(current.get("smoke")) == bool(baseline.get("smoke"))
+    violations: list[dict] = []
+
+    def check(name: str, cur: float, base: float) -> None:
+        higher_is_worse = (
+            name.startswith("pad_overhead") or name.endswith("wall_s")
+        )
+        ok = (cur <= base * (1 + tol)) if higher_is_worse \
+            else (cur >= base * (1 - tol))
+        if not ok:
+            violations.append(
+                {"metric": name, "current": cur, "baseline": base,
+                 "tolerance": tol}
+            )
+
+    if same_ctx:
+        for k in sorted(cur_ctx.keys() & base_ctx.keys()):
+            check(k, cur_ctx[k], base_ctx[k])
+    for k in sorted(cur_free.keys() & base_free.keys()):
+        check(k, cur_free[k], base_free[k])
+    return violations
+
+
+def check_device_scaling(
+    doc: dict, *, dip_tol: float = SCALING_DIP_TOL
+) -> list[dict]:
+    """Requests/sec must be non-decreasing in the stream count (within
+    ``dip_tol`` timing noise) — the v1 anti-result this PR removes
+    regressed 15.2 -> 0.67 req/s going 1 -> 8 devices."""
+    sweep = sorted(
+        doc.get("device_sweep") or [], key=lambda r: r["devices"]
+    )
+    violations = []
+    for prev, cur in zip(sweep, sweep[1:]):
+        if cur["requests_per_s"] < prev["requests_per_s"] * (1 - dip_tol):
+            violations.append({
+                "metric": (
+                    f"monotone requests_per_s "
+                    f"dev{prev['devices']}->dev{cur['devices']}"
+                ),
+                "current": cur["requests_per_s"],
+                "baseline": prev["requests_per_s"],
+                "tolerance": dip_tol,
+            })
+    return violations
+
+
+def apply_gate(doc: dict, baseline_path: str) -> list[dict]:
+    """Monotone-scaling check plus (when a baseline file is given) the
+    regression diff.  Returns all violations."""
+    violations = check_device_scaling(doc)
+    if baseline_path:
+        with open(baseline_path) as fh:
+            baseline = json.load(fh)
+        violations += compare_to_baseline(doc, baseline)
+    return violations
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced stream for CI wall-clock")
+    ap.add_argument("--json", default="BENCH_pr6.json",
+                    help="output path ('' to skip)")
+    ap.add_argument("--slots", default="",
+                    help="comma-separated slot counts (default by mode)")
+    ap.add_argument("--baseline", default="",
+                    help="committed BENCH_*.json to gate against (>25% "
+                         "regression fails); device-scaling monotonicity "
+                         "is checked regardless")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-N timing repeats per point")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    doc = build_doc(smoke=args.smoke, seed=args.seed, slots=args.slots,
+                    repeats=args.repeats)
+
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(doc, fh, indent=2, sort_keys=True, default=str)
         print(f"bench_json,path,{args.json}")
-    if failures:
-        print(f"service,parity,FAIL ({len(failures)} mismatches)")
+
+    ok = True
+    if doc["parity_failures"]:
+        print(f"service,parity,FAIL ({len(doc['parity_failures'])} mismatches)")
+        ok = False
+    else:
+        print("service,parity,OK")
+    violations = apply_gate(doc, args.baseline)
+    for v in violations:
+        print(f"service,regression,{v['metric']}: "
+              f"{v['current']:.4g} vs baseline {v['baseline']:.4g}")
+    if violations:
+        print(f"service,baseline,FAIL ({len(violations)} regressions)")
+        ok = False
+    else:
+        print("service,baseline,OK")
+    if not ok:
         raise SystemExit(1)
-    print("service,parity,OK")
 
 
 if __name__ == "__main__":

@@ -1012,26 +1012,64 @@ def _dc_solve_vmapped(m: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     return jax.vmap(jnp.linalg.solve)(m, -c)
 
 
-def dc_solve_batch(bss: BatchedStateSpace, *, mesh=None) -> np.ndarray:
-    """Steady states ``z_b = -M_b^{-1} c_b`` for the whole batch.
+# per-device stream variant: each micro-batch gets freshly transferred
+# (B, nz, nz) operand buffers that nothing reads after the solve, so
+# they are donated — XLA reuses the operand allocation for the result
+# instead of holding both live per in-flight micro-batch.
+_dc_solve_vmapped_donated = jax.jit(
+    lambda m, c: jax.vmap(jnp.linalg.solve)(m, -c), donate_argnums=(0, 1)
+)
 
-    Runs the vmapped x64 solve on device; systems whose operator is
-    singular (degenerate supports, see the single-system path) are
-    re-solved with the tiny relative leakage ``1e-12 |M|`` to ground.
+# platforms whose runtime implements input/output buffer aliasing; the
+# CPU client ignores donations (with a warning), so fall back there
+_DONATION_PLATFORMS = ("gpu", "cuda", "rocm", "tpu")
 
-    ``mesh`` (a 1-d solver mesh over the batch axis, see
-    :func:`repro.distributed.sharding.solver_mesh`) places the operator
-    batch with a batch-axis ``NamedSharding`` before the solve; the
-    per-system factorizations are independent, so the vmapped solve
-    partitions cleanly across devices.
+
+def _donation_supported(device=None) -> bool:
+    plat = device.platform if device is not None else jax.default_backend()
+    return plat in _DONATION_PLATFORMS
+
+
+def dc_solve_batch_submit(
+    bss: BatchedStateSpace, *, mesh=None, device=None
+) -> jnp.ndarray:
+    """Dispatch the batched DC solve; returns the *device* result.
+
+    Under JAX async dispatch the returned array is a future — the host
+    thread is free to build the next micro-batch while the device
+    factorizes this one (the solve service's overlap model).  Pair with
+    :func:`dc_solve_batch_finalize`, which blocks, materializes and
+    applies the singular-support fallback; :func:`dc_solve_batch` is
+    exactly submit + finalize.
+
+    ``device`` places the whole batch on one device (per-device solve
+    streams, donated operand buffers where the platform supports
+    aliasing); ``mesh`` instead shards the batch axis over a 1-d solver
+    mesh (:func:`repro.distributed.sharding.solver_mesh`).  The two are
+    mutually exclusive.
     """
+    if device is not None and mesh is not None:
+        raise ValueError("pass either device= (stream) or mesh= (shard)")
+    if device is not None:
+        m = jax.device_put(bss.m, device)
+        c = jax.device_put(bss.c, device)
+        if _donation_supported(device):
+            return _dc_solve_vmapped_donated(m, c)
+        return _dc_solve_vmapped(m, c)
     m = jnp.asarray(bss.m)
     c = jnp.asarray(bss.c)
     if mesh is not None:
         from repro.distributed.sharding import shard_system_batch
 
         m, c = shard_system_batch(m, c, mesh=mesh)
-    z = np.asarray(_dc_solve_vmapped(m, c))
+    return _dc_solve_vmapped(m, c)
+
+
+def dc_solve_batch_finalize(
+    z_dev: jnp.ndarray, bss: BatchedStateSpace
+) -> np.ndarray:
+    """Block on an in-flight DC solve and apply the singular fallback."""
+    z = np.asarray(z_dev)
     bad = ~np.all(np.isfinite(z), axis=1)
     if np.any(bad):
         eye = np.eye(bss.n_states)
@@ -1039,6 +1077,22 @@ def dc_solve_batch(bss: BatchedStateSpace, *, mesh=None) -> np.ndarray:
             eps = 1e-12 * np.abs(bss.m[b]).max()
             z[b] = np.linalg.solve(bss.m[b] - eps * eye, -bss.c[b])
     return z
+
+
+def dc_solve_batch(
+    bss: BatchedStateSpace, *, mesh=None, device=None
+) -> np.ndarray:
+    """Steady states ``z_b = -M_b^{-1} c_b`` for the whole batch.
+
+    Runs the vmapped x64 solve on device; systems whose operator is
+    singular (degenerate supports, see the single-system path) are
+    re-solved with the tiny relative leakage ``1e-12 |M|`` to ground.
+    See :func:`dc_solve_batch_submit` for the ``mesh`` / ``device``
+    placement modes and the async split.
+    """
+    return dc_solve_batch_finalize(
+        dc_solve_batch_submit(bss, mesh=mesh, device=device), bss
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -197,7 +197,64 @@ class BatchOperatingPoint:
         )
 
 
-def operating_point_batch(
+@dataclasses.dataclass
+class PendingBatchOperatingPoint:
+    """An in-flight batched DC solve: host metadata + the device future.
+
+    Produced by :func:`operating_point_batch_submit` after the host-side
+    work (error model, batched assembly) is done and the vmapped solve
+    has been *dispatched*; under JAX async dispatch the device computes
+    while the caller builds its next micro-batch.  :meth:`wait` blocks,
+    materializes and unpacks — ``operating_point_batch`` is exactly
+    submit + wait, so the two paths cannot drift.
+    """
+
+    _bss: "engine.BatchedStateSpace"
+    _z_dev: object
+    _x_ref: np.ndarray | None
+    _batch: int
+
+    def wait(self) -> BatchOperatingPoint:
+        bss = self._bss
+        z = engine.dc_solve_batch_finalize(self._z_dev, bss)
+        nn = bss.n_nodes
+        nu = bss.n_unknowns
+        v = z[:, :nn]
+        x = v[:, :nu]
+        if bss.amp_out_index.size:
+            a = z[:, bss.amp_out_index] * bss.amp_active
+            sat = np.any(
+                (np.abs(z[:, bss.amp_out_index]) > bss.amp_rail)
+                & bss.amp_active,
+                axis=1,
+            )
+        else:
+            a = np.zeros((self._batch, 0))
+            sat = np.zeros(self._batch, dtype=bool)
+
+        max_rel = max_abs = err_fs = None
+        if self._x_ref is not None:
+            x_ref = np.asarray(self._x_ref, dtype=np.float64).reshape(
+                self._batch, nu
+            )
+            err = np.abs(x - x_ref)
+            max_abs = err.max(axis=1)
+            scale = np.maximum(np.abs(x_ref), 1e-3)
+            max_rel = (err / scale).max(axis=1)
+            err_fs = max_abs / np.maximum(np.abs(x_ref).max(axis=1), 1e-12)
+        return BatchOperatingPoint(
+            x=x,
+            v=v,
+            amp_outputs=a,
+            amp_saturated=sat,
+            max_rel_error=max_rel,
+            max_abs_error=max_abs,
+            err_fullscale=err_fs,
+            amp_active=bss.amp_active,
+        )
+
+
+def operating_point_batch_submit(
     nets: list[Netlist],
     opamp: OpAmpSpec = AD712,
     *,
@@ -205,16 +262,15 @@ def operating_point_batch(
     x_ref: np.ndarray | None = None,
     pattern: "engine.StampPattern | None" = None,
     mesh=None,
-) -> BatchOperatingPoint:
-    """Batched DC solve of the (non-ideal) circuits.
+    device=None,
+) -> PendingBatchOperatingPoint:
+    """Host phase of the batched DC analysis + async device dispatch.
 
-    The per-system error model is applied exactly as in the single path
-    (quantize -> perturb -> wiper per netlist, per-amp offset draws with
-    the same per-system RNG stream), then the whole batch is assembled
-    on one shared stamp pattern and solved with the engine's vmapped
-    x64 linear solve.  ``x_ref`` is (B, n) (or None to skip errors).
-    ``mesh`` shards the DC solve's batch axis over a 1-d solver mesh
-    (:func:`repro.distributed.sharding.solver_mesh`).
+    Applies the per-system error model and assembles the batch on the
+    shared stamp pattern (host-side numpy), then dispatches the vmapped
+    x64 solve — on one ``device`` (per-device solve streams, see
+    :func:`repro.core.engine.dc_solve_batch_submit`) or sharded over
+    ``mesh`` — and returns without blocking.
     """
     spec = opamp
     if not nonideal.use_finite_gain:
@@ -225,37 +281,40 @@ def operating_point_batch(
         for net in nets_ni
     ]
     bss = engine.assemble_batch(nets_ni, spec, v_os=v_os, pattern=pattern)
-    z = engine.dc_solve_batch(bss, mesh=mesh)
-
-    nn = bss.n_nodes
-    nu = bss.n_unknowns
-    v = z[:, :nn]
-    x = v[:, :nu]
-    if bss.amp_out_index.size:
-        a = z[:, bss.amp_out_index] * bss.amp_active
-        sat = np.any(
-            (np.abs(z[:, bss.amp_out_index]) > bss.amp_rail) & bss.amp_active,
-            axis=1,
-        )
-    else:
-        a = np.zeros((len(nets), 0))
-        sat = np.zeros(len(nets), dtype=bool)
-
-    max_rel = max_abs = err_fs = None
-    if x_ref is not None:
-        x_ref = np.asarray(x_ref, dtype=np.float64).reshape(len(nets), nu)
-        err = np.abs(x - x_ref)
-        max_abs = err.max(axis=1)
-        scale = np.maximum(np.abs(x_ref), 1e-3)
-        max_rel = (err / scale).max(axis=1)
-        err_fs = max_abs / np.maximum(np.abs(x_ref).max(axis=1), 1e-12)
-    return BatchOperatingPoint(
-        x=x,
-        v=v,
-        amp_outputs=a,
-        amp_saturated=sat,
-        max_rel_error=max_rel,
-        max_abs_error=max_abs,
-        err_fullscale=err_fs,
-        amp_active=bss.amp_active,
+    z_dev = engine.dc_solve_batch_submit(bss, mesh=mesh, device=device)
+    return PendingBatchOperatingPoint(
+        _bss=bss, _z_dev=z_dev, _x_ref=x_ref, _batch=len(nets)
     )
+
+
+def operating_point_batch(
+    nets: list[Netlist],
+    opamp: OpAmpSpec = AD712,
+    *,
+    nonideal: NonIdealities = DEFAULT_NONIDEAL,
+    x_ref: np.ndarray | None = None,
+    pattern: "engine.StampPattern | None" = None,
+    mesh=None,
+    device=None,
+) -> BatchOperatingPoint:
+    """Batched DC solve of the (non-ideal) circuits.
+
+    The per-system error model is applied exactly as in the single path
+    (quantize -> perturb -> wiper per netlist, per-amp offset draws with
+    the same per-system RNG stream), then the whole batch is assembled
+    on one shared stamp pattern and solved with the engine's vmapped
+    x64 linear solve.  ``x_ref`` is (B, n) (or None to skip errors).
+    ``mesh`` shards the DC solve's batch axis over a 1-d solver mesh
+    (:func:`repro.distributed.sharding.solver_mesh`); ``device`` places
+    the whole batch on one device instead (the serving streams).  This
+    is :func:`operating_point_batch_submit` immediately waited on.
+    """
+    return operating_point_batch_submit(
+        nets,
+        opamp,
+        nonideal=nonideal,
+        x_ref=x_ref,
+        pattern=pattern,
+        mesh=mesh,
+        device=device,
+    ).wait()

@@ -26,8 +26,9 @@ batched results agree by construction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -43,7 +44,7 @@ from repro.core.operating_point import (
     DEFAULT_NONIDEAL,
     IDEAL,
     NonIdealities,
-    operating_point_batch,
+    operating_point_batch_submit,
 )
 from repro.core.specs import OPAMPS, CircuitParams, DEFAULT_PARAMS, OpAmpSpec
 
@@ -130,7 +131,31 @@ def _build_nets(
     raise ValueError(f"unknown analog method {method!r}")
 
 
-def _solve_batch_digital(
+@dataclasses.dataclass
+class PendingBatchSolve:
+    """Handle to an in-flight batched solve on one device.
+
+    :func:`solve_batch_submit` did the host-side work (netlist build,
+    error model, assembly) and *dispatched* the device solve; under JAX
+    async dispatch the device computes while the caller builds its next
+    micro-batch — the solve service's overlap model.  :meth:`wait`
+    blocks on the device result and materializes the
+    :class:`BatchSolveResult`; it returns exactly what ``solve_batch``
+    with the same arguments returns, because ``solve_batch`` *is*
+    submit + wait.  ``wait()`` is idempotent.
+    """
+
+    method: str
+    _finalize: Callable[[], BatchSolveResult]
+    _done: BatchSolveResult | None = None
+
+    def wait(self) -> BatchSolveResult:
+        if self._done is None:
+            self._done = self._finalize()
+        return self._done
+
+
+def _solve_batch_digital_submit(
     a: np.ndarray,
     b: np.ndarray,
     method: str,
@@ -138,7 +163,8 @@ def _solve_batch_digital(
     tol: float,
     max_iter: int,
     mesh=None,
-) -> BatchSolveResult:
+    device=None,
+) -> PendingBatchSolve:
     """Batched digital-baseline dispatch (vmapped Cholesky, batched
     CG/Jacobi with per-system convergence freezing).
 
@@ -149,17 +175,34 @@ def _solve_batch_digital(
     ``solve_batch(...)[k]`` round-trips to what ``solve(a[k], b[k])``
     returns.  ``mesh`` (a 1-d solver mesh, see
     :func:`repro.distributed.sharding.solver_mesh`) shards the batch
-    axis over devices before the solve.
+    axis over devices; ``device`` places the whole batch on one device
+    (the serving streams) — the jitted baselines dispatch async either
+    way, and the returned handle materializes on ``wait()``.
     """
-    aj = jnp.asarray(a)
-    bj = jnp.asarray(b)
-    if mesh is not None:
-        from repro.distributed.sharding import shard_system_batch
+    if device is not None:
+        aj = jax.device_put(a, device)
+        bj = jax.device_put(b, device)
+    else:
+        aj = jnp.asarray(a)
+        bj = jnp.asarray(b)
+        if mesh is not None:
+            from repro.distributed.sharding import shard_system_batch
 
-        aj, bj = shard_system_batch(aj, bj, mesh=mesh)
-    info: dict[str, Any] = {}
+            aj, bj = shard_system_batch(aj, bj, mesh=mesh)
+
+    n_systems = a.shape[0]
     if method == "cholesky":
-        x = np.asarray(baselines.cholesky_solve_batch(aj, bj))
+        x_dev = baselines.cholesky_solve_batch(aj, bj)
+
+        def finalize() -> BatchSolveResult:
+            return BatchSolveResult(
+                x=np.asarray(x_dev),
+                method=method,
+                stable=np.ones(n_systems, dtype=bool),
+                settle_time=None,
+                info={},
+            )
+
     else:
         fn = (
             baselines.cg_solve_batch
@@ -167,18 +210,157 @@ def _solve_batch_digital(
             else baselines.jacobi_solve_batch
         )
         res = fn(aj, bj, tol=tol, max_iter=max_iter)
-        x = np.asarray(res.x)
-        info = {
-            "iterations": np.asarray(res.iterations, dtype=np.int64),
-            "residual_norm": np.asarray(res.residual_norm, dtype=np.float64),
-        }
-    return BatchSolveResult(
-        x=x,
-        method=method,
-        stable=np.ones(a.shape[0], dtype=bool),
-        settle_time=None,
-        info=info,
+
+        def finalize() -> BatchSolveResult:
+            return BatchSolveResult(
+                x=np.asarray(res.x),
+                method=method,
+                stable=np.ones(n_systems, dtype=bool),
+                settle_time=None,
+                info={
+                    "iterations": np.asarray(res.iterations, dtype=np.int64),
+                    "residual_norm": np.asarray(
+                        res.residual_norm, dtype=np.float64
+                    ),
+                },
+            )
+
+    return PendingBatchSolve(method=method, _finalize=finalize)
+
+
+def solve_batch_submit(
+    a,
+    b,
+    *,
+    method: str = "analog_2n",
+    opamp: str | OpAmpSpec = "AD712",
+    nonideal: NonIdealities | None = None,
+    params: CircuitParams = DEFAULT_PARAMS,
+    d_policy: str = "proposed",
+    beta: float = 0.5,
+    alpha: float = 1.0,
+    compute_settling: bool = False,
+    settle_method: str = "auto",
+    settle_max_steps: int = 200_000,
+    settle_dt_policy: str = "diag",
+    settle_matrix_free: bool = False,
+    x_ref: np.ndarray | None = None,
+    tol: float = 1e-10,
+    max_iter: int = 10000,
+    pattern: "engine.StampPattern | None" = None,
+    mesh=None,
+    device=None,
+    nets: list[Netlist] | None = None,
+) -> PendingBatchSolve:
+    """Host phase + async device dispatch of :func:`solve_batch`.
+
+    Validates, builds the netlists, applies the error model and
+    assembles the batch (host-side), then *dispatches* the device solve
+    and returns a :class:`PendingBatchSolve` without blocking — the
+    caller overlaps the device's factorization with its next
+    micro-batch's host build (JAX async dispatch works on every
+    backend, including forced host-platform devices).  ``device``
+    places the whole batch on one device — the serving v2 per-device
+    streams (mutually exclusive with ``mesh``, which shards the batch
+    axis instead).  All other arguments match :func:`solve_batch`,
+    which *is* ``solve_batch_submit(...).wait()`` — parity between the
+    blocking and pipelined paths holds by construction.
+
+    ``compute_settling`` work runs inside ``wait()`` (the settling
+    analysis shares the DC assembly and its transient sweep is
+    synchronous), so settling requests hold their stream for the full
+    analysis — one reason the solve service buckets them at exact
+    ``n`` instead of padding.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    if a.ndim != 3 or b.ndim != 2 or a.shape[:2] != (b.shape[0], b.shape[1]):
+        raise ValueError(f"expected (B, n, n) and (B, n); got {a.shape}, {b.shape}")
+    if mesh is not None and device is not None:
+        raise ValueError("pass either mesh= or device=, not both")
+    if method in DIGITAL_METHODS:
+        return _solve_batch_digital_submit(
+            a, b, method, tol=tol, max_iter=max_iter, mesh=mesh, device=device
+        )
+    if method not in ANALOG_METHODS:
+        raise ValueError(
+            f"unknown method {method!r}: expected one of "
+            f"{ANALOG_METHODS + DIGITAL_METHODS}"
+        )
+
+    spec = OPAMPS[opamp] if isinstance(opamp, str) else opamp
+    ni = IDEAL if nonideal is None else nonideal
+
+    if nets is None:
+        nets = _build_nets(
+            a, b, method, d_policy=d_policy, beta=beta, alpha=alpha,
+            params=params,
+        )
+    elif len(nets) != a.shape[0]:
+        raise ValueError(f"got {len(nets)} nets for a batch of {a.shape[0]}")
+    if pattern is None:
+        pattern = engine.pattern_union(nets, spec)
+    if compute_settling and settle_matrix_free and x_ref is None:
+        # caller error: surface at submit time, not from inside wait()
+        raise ValueError("settle_matrix_free requires x_ref")
+    # non-idealities perturb conductance values, never the cell pattern,
+    # so the clean-net pattern is shared with the OP assembly
+    pending_op = operating_point_batch_submit(
+        nets, spec, nonideal=ni, x_ref=x_ref, pattern=pattern, mesh=mesh,
+        device=device,
     )
+
+    def finalize() -> BatchSolveResult:
+        op = pending_op.wait()
+        info: dict[str, Any] = {
+            "design": np.asarray([net.design for net in nets]),
+            "n_nodes": nets[0].n_nodes,
+            "n_amps": np.asarray([net.n_amps for net in nets]),
+            "n_branches": np.asarray([net.n_branches for net in nets]),
+            "is_passive": np.asarray([net.is_passive for net in nets]),
+            "max_conductance": np.asarray(
+                [net.max_conductance() for net in nets]
+            ),
+            "max_rel_error": op.max_rel_error,
+            "max_abs_error": op.max_abs_error,
+            "err_fullscale": op.err_fullscale,
+        }
+        result = BatchSolveResult(
+            x=op.x,
+            method=method,
+            stable=~op.amp_saturated,
+            settle_time=None,
+            info=info,
+        )
+        if compute_settling:
+            # x_ref reaches the transient engine only on explicit opt-in
+            # (or for the estimator-only spectral path, where it merely
+            # fills x_converged): the default euler/auto path keeps its
+            # settle-against-DC-fixed-point semantics
+            settle_ref = (
+                x_ref if (settle_matrix_free or settle_method == "spectral")
+                else None
+            )
+            tr = engine.transient_batch(
+                nets, spec, method=settle_method, pattern=pattern,
+                max_steps=settle_max_steps,
+                x_ref=settle_ref,
+                dt_policy=settle_dt_policy,
+            )
+            result.settle_time = tr.settle_time
+            result.stable = result.stable & tr.stable
+            result.info["max_re_eig"] = tr.max_re_eig
+            result.info["dominant_tau"] = tr.dominant_tau
+            result.info["mirror_residual"] = tr.mirror_residual
+            result.info["settle_method"] = tr.method
+            if tr.certified is not None:
+                # spectral estimator: converged rightmost mode +
+                # contracting slow subspace (see
+                # repro.core.spectral.SpectralBounds)
+                result.info["settle_certified"] = tr.certified
+        return result
+
+    return PendingBatchSolve(method=method, _finalize=finalize)
 
 
 def solve_batch(
@@ -202,6 +384,7 @@ def solve_batch(
     max_iter: int = 10000,
     pattern: "engine.StampPattern | None" = None,
     mesh=None,
+    device=None,
     nets: list[Netlist] | None = None,
 ) -> BatchSolveResult:
     """Solve a batch of SPD systems ``A[k] x[k] = b[k]``.
@@ -234,92 +417,39 @@ def solve_batch(
     system's cells — the solve service caches one per request bucket
     and reuses it across micro-batches); ``mesh`` shards the batch
     axis of the heavy device calls (DC solve / digital baselines) over
-    a 1-d solver mesh (:func:`repro.distributed.sharding.solver_mesh`).
+    a 1-d solver mesh (:func:`repro.distributed.sharding.solver_mesh`);
+    ``device`` instead places the whole batch on one device (the
+    serving streams' placement mode — see :func:`solve_batch_submit`
+    for the non-blocking form this function wraps).
     ``nets`` hands over pre-built netlists for the analog methods (they
     MUST be the builders' output for exactly ``(a, b, method)`` and the
     design options — a performance passthrough for callers like the
     solve service that already built them, not a way to solve arbitrary
     netlists; use :func:`repro.core.engine.transient_batch` for that).
     """
-    a = np.asarray(a, dtype=np.float64)
-    b = np.asarray(b, dtype=np.float64)
-    if a.ndim != 3 or b.ndim != 2 or a.shape[:2] != (b.shape[0], b.shape[1]):
-        raise ValueError(f"expected (B, n, n) and (B, n); got {a.shape}, {b.shape}")
-    if method in DIGITAL_METHODS:
-        return _solve_batch_digital(
-            a, b, method, tol=tol, max_iter=max_iter, mesh=mesh
-        )
-    if method not in ANALOG_METHODS:
-        raise ValueError(
-            f"unknown method {method!r}: expected one of "
-            f"{ANALOG_METHODS + DIGITAL_METHODS}"
-        )
-
-    spec = OPAMPS[opamp] if isinstance(opamp, str) else opamp
-    ni = IDEAL if nonideal is None else nonideal
-
-    if nets is None:
-        nets = _build_nets(
-            a, b, method, d_policy=d_policy, beta=beta, alpha=alpha,
-            params=params,
-        )
-    elif len(nets) != a.shape[0]:
-        raise ValueError(f"got {len(nets)} nets for a batch of {a.shape[0]}")
-    if pattern is None:
-        pattern = engine.pattern_union(nets, spec)
-    # non-idealities perturb conductance values, never the cell pattern,
-    # so the clean-net pattern is shared with the OP assembly
-    op = operating_point_batch(
-        nets, spec, nonideal=ni, x_ref=x_ref, pattern=pattern, mesh=mesh
-    )
-    info: dict[str, Any] = {
-        "design": np.asarray([net.design for net in nets]),
-        "n_nodes": nets[0].n_nodes,
-        "n_amps": np.asarray([net.n_amps for net in nets]),
-        "n_branches": np.asarray([net.n_branches for net in nets]),
-        "is_passive": np.asarray([net.is_passive for net in nets]),
-        "max_conductance": np.asarray(
-            [net.max_conductance() for net in nets]
-        ),
-        "max_rel_error": op.max_rel_error,
-        "max_abs_error": op.max_abs_error,
-        "err_fullscale": op.err_fullscale,
-    }
-    result = BatchSolveResult(
-        x=op.x,
+    return solve_batch_submit(
+        a,
+        b,
         method=method,
-        stable=~op.amp_saturated,
-        settle_time=None,
-        info=info,
-    )
-    if compute_settling:
-        if settle_matrix_free and x_ref is None:
-            raise ValueError("settle_matrix_free requires x_ref")
-        # x_ref reaches the transient engine only on explicit opt-in
-        # (or for the estimator-only spectral path, where it merely
-        # fills x_converged): the default euler/auto path keeps its
-        # settle-against-DC-fixed-point semantics
-        settle_ref = (
-            x_ref if (settle_matrix_free or settle_method == "spectral")
-            else None
-        )
-        tr = engine.transient_batch(
-            nets, spec, method=settle_method, pattern=pattern,
-            max_steps=settle_max_steps,
-            x_ref=settle_ref,
-            dt_policy=settle_dt_policy,
-        )
-        result.settle_time = tr.settle_time
-        result.stable = result.stable & tr.stable
-        result.info["max_re_eig"] = tr.max_re_eig
-        result.info["dominant_tau"] = tr.dominant_tau
-        result.info["mirror_residual"] = tr.mirror_residual
-        result.info["settle_method"] = tr.method
-        if tr.certified is not None:
-            # spectral estimator: converged rightmost mode + contracting
-            # slow subspace (see repro.core.spectral.SpectralBounds)
-            result.info["settle_certified"] = tr.certified
-    return result
+        opamp=opamp,
+        nonideal=nonideal,
+        params=params,
+        d_policy=d_policy,
+        beta=beta,
+        alpha=alpha,
+        compute_settling=compute_settling,
+        settle_method=settle_method,
+        settle_max_steps=settle_max_steps,
+        settle_dt_policy=settle_dt_policy,
+        settle_matrix_free=settle_matrix_free,
+        x_ref=x_ref,
+        tol=tol,
+        max_iter=max_iter,
+        pattern=pattern,
+        mesh=mesh,
+        device=device,
+        nets=nets,
+    ).wait()
 
 
 def solve(

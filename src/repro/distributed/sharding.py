@@ -121,6 +121,19 @@ def param_specs(logical_tree, rules: Mapping[str, object]):
 # rules therefore map the logical "sysbatch" axis to the mesh and pin
 # everything else replicated, mirroring how the model side treats
 # "batch".
+#
+# Two placement modes share this mesh:
+#
+# * `shard_system_batch` splits ONE micro-batch's batch axis over every
+#   device (GSPMD NamedSharding).  Each solve then pays a cross-device
+#   dispatch + gather on the request path — measured in BENCH_pr5.json
+#   as an *inverted* device-scaling curve.  Kept for direct
+#   `solve_batch(mesh=...)` callers with big standalone batches.
+# * `stream_devices` (the serving v2 path) returns the mesh's device
+#   list so the solve service can go data-parallel ACROSS micro-batches
+#   instead: each micro-batch lands whole on one device (round-robin),
+#   devices never exchange a byte, and JAX async dispatch overlaps one
+#   stream's device solve with the next micro-batch's host-side build.
 
 SOLVER_BATCH_AXIS = "sysbatch"
 
@@ -150,6 +163,30 @@ def solver_mesh(n_devices: Optional[int] = None, devices=None):
             )
         devs = devs[:n_devices]
     return _make_mesh((len(devs),), (SOLVER_BATCH_AXIS,), devs)
+
+
+def stream_devices(mesh=None, devices=None, n_devices: Optional[int] = None):
+    """Ordered device list for per-device solve streams (serving v2).
+
+    Accepts a 1-d solver mesh (its device order), an explicit device
+    list, or a device count (the first N visible devices); with none of
+    the three, the default device alone.  The solve service assigns
+    whole micro-batches to these devices round-robin — per-micro-batch
+    data parallelism with no collectives — instead of sharding one
+    micro-batch's batch axis via :func:`shard_system_batch`.
+    """
+    if devices is not None:
+        return list(devices)
+    if mesh is not None:
+        return [d for d in mesh.devices.flat]
+    devs = list(jax.devices())
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise RuntimeError(
+                f"stream wants {n_devices} devices, have {len(devs)}"
+            )
+        devs = devs[:n_devices]
+    return devs
 
 
 def system_batch_sharding(mesh, ndim: int):

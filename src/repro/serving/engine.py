@@ -1,10 +1,18 @@
-"""Batched serving engine.
+"""Batched serving engine and the shared slot-admission machinery.
 
 Continuous-batching-lite: a fixed decode batch of slots; finished
 sequences release their slot and the scheduler admits queued requests
 via prefill-into-slot.  Caches are the model's explicit pytrees, so the
 engine is family-agnostic (GQA KV caches, SSM states, hybrid both,
 enc-dec cross caches).
+
+The *admission* half of that loop — a queue of waiting requests ordered
+by priority, deadline and arrival, popped whenever a serving slot frees
+up — is not decode-specific, so it lives here as
+:class:`AdmissionQueue` / :func:`admission_key` and is shared with the
+solve service (:mod:`repro.serving.solve_service`), whose "slots" are
+fixed-shape micro-batches pulled by per-device solve streams.  One
+scheduler, two consumers; neither reimplements the other's ordering.
 
 For the framework's scale posture the engine runs under the serving
 mesh rules (decode: head_dim-sharded caches) and both step functions
@@ -14,7 +22,8 @@ are jit-compiled once per (batch, seq) bucket.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import math
+from typing import Any, Callable, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +33,83 @@ from repro.models.config import ModelConfig
 from repro.models.model import decode_step, init_decode_cache, prefill
 
 
+def admission_key(item) -> tuple:
+    """Slot-admission ordering shared by every serving front-end.
+
+    Higher ``priority`` admits first; within a priority class requests
+    order earliest-deadline-first (``deadline=None`` ranks after every
+    deadlined request — a request that cannot be late never preempts
+    one that can); ties break FIFO on the arrival stamp ``seq``.
+    """
+    d = getattr(item, "deadline", None)
+    return (
+        -getattr(item, "priority", 0),
+        math.inf if d is None else float(d),
+        getattr(item, "seq", 0),
+    )
+
+
+class AdmissionQueue:
+    """Priority/deadline admission queue over slot-based serving loops.
+
+    Items must carry ``priority`` / ``deadline`` / ``seq`` attributes
+    (dataclass fields on :class:`Request` and the solve service's
+    ``SolveTicket``); :meth:`push` stamps the arrival ``seq`` so FIFO
+    ties are stable.  :meth:`requeue` re-adds items *with their original
+    stamps* — the solve service's failed-drain contract re-queues every
+    undelivered ticket at its original admission rank, not at the back.
+
+    Queues here are short-lived and small (they drain into slots every
+    step), so pops scan for the minimum instead of maintaining a heap —
+    that keeps arbitrary inspection/removal (:meth:`discard`) trivial.
+    """
+
+    def __init__(self) -> None:
+        self._items: list = []
+        self._seq = 0
+
+    def push(self, item, *, priority: int = 0, deadline: float | None = None):
+        item.priority = priority
+        item.deadline = deadline
+        item.seq = self._seq
+        self._seq += 1
+        self._items.append(item)
+        return item
+
+    def requeue(self, items: Iterable) -> None:
+        """Re-admit items that keep their original admission stamps."""
+        self._items.extend(items)
+
+    def pop(self):
+        """Remove and return the next item in admission order."""
+        if not self._items:
+            raise IndexError("pop from empty AdmissionQueue")
+        best = min(range(len(self._items)),
+                   key=lambda i: admission_key(self._items[i]))
+        return self._items.pop(best)
+
+    def pop_all(self) -> list:
+        """Drain the whole queue in admission order."""
+        out = sorted(self._items, key=admission_key)
+        self._items.clear()
+        return out
+
+    def discard(self, pred: Callable[[Any], bool]) -> list:
+        """Remove (and return) every item matching ``pred``."""
+        dropped = [it for it in self._items if pred(it)]
+        self._items = [it for it in self._items if not pred(it)]
+        return dropped
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def __iter__(self):
+        return iter(sorted(self._items, key=admission_key))
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -31,6 +117,10 @@ class Request:
     max_new: int = 32
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # admission stamps (set by AdmissionQueue.push)
+    priority: int = 0
+    deadline: float | None = None
+    seq: int = 0
 
 
 class ServeEngine:
@@ -60,16 +150,17 @@ class ServeEngine:
         self.cache = init_decode_cache(cfg, batch_slots, max_seq)
         self.pos = np.zeros(batch_slots, dtype=np.int32)     # per-slot length
         self.active: list[Optional[Request]] = [None] * batch_slots
-        self.queue: list[Request] = []
+        self.queue = AdmissionQueue()
 
     # ----------------------------------------------------------- scheduling
-    def submit(self, req: Request):
-        self.queue.append(req)
+    def submit(self, req: Request, *, priority: int = 0,
+               deadline: float | None = None):
+        self.queue.push(req, priority=priority, deadline=deadline)
 
     def _admit(self):
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.pop()
                 self._prefill_slot(slot, req)
 
     def _prefill_slot(self, slot: int, req: Request):

@@ -1,16 +1,21 @@
-"""Request-batched, multi-device solve service.
+"""Async continuously-batched, multi-device solve service.
 
 The paper's throughput claim is a *serving* story: a fixed analog array
 solves a stream of independent SPD systems at a complexity independent
 of matrix size.  This module is the front-end that turns a stream of
 heterogeneous requests (different ``n``, different methods, different
-settle options) into the homogeneous shared-stamp-pattern batches the
-batched engine (:func:`repro.core.solver.solve_batch`) is fast at:
+settle options) into the homogeneous shared-stamp-pattern micro-batches
+the batched engine (:func:`repro.core.solver.solve_batch`) is fast at —
+and keeps every device busy while the host builds the next one:
 
 * **submit** — requests are queued, not solved.  Each carries its
-  system, the solve method (analog designs or digital baselines) and
-  the option signature that decides batch compatibility.
-* **bucket** — queued requests are grouped by
+  system, the solve method (analog designs or digital baselines), the
+  option signature that decides batch compatibility, and its admission
+  stamps (``priority`` / ``deadline``) — intake ordering is the same
+  :class:`repro.serving.engine.AdmissionQueue` the token-serving engine
+  admits decode slots with: priority first, earliest-deadline within a
+  class, FIFO on ties.
+* **bucket** — admitted requests are grouped by
   ``(n_padded, method, option signature)``.  ``n_padded`` comes from a
   small padding grid, so a mixed-size stream collapses onto a few
   device shapes instead of one jit compile per distinct ``n``.
@@ -23,19 +28,50 @@ batched engine (:func:`repro.core.solver.solve_batch`) is fast at:
   RHS is nonzero, carry a supply leg to the rail — the padded circuit
   is never floating, so the DC operator stays regular.  The known pad
   solution (``PAD_SOLUTION_V``) is masked back out of every result.
-* **dispatch** — each bucket runs through a cached pipeline: one stamp
-  pattern per bucket, reused across micro-batches (re-merged only if a
-  later micro-batch stamps a cell slot the cached pattern lacks), with
-  fixed ``(batch_slots, n_pad)`` device shapes so jit caches are hit
-  across micro-batches, and the batch axis sharded over a 1-d solver
-  mesh (:func:`repro.distributed.sharding.solver_mesh`) when one is
-  given.
+  ``stats()['pad_overhead']`` accounts for the full price: dense work
+  scales with ``n_pad^2`` over every dispatched slot, repeat-fills
+  included.
+* **stream** — micro-batches are data-parallel *across* devices, not
+  sharded within one: each fixed-shape ``(batch_slots, n_pad)``
+  micro-batch lands whole on one device
+  (:func:`repro.distributed.sharding.stream_devices` resolves the
+  stream list), assigned round-robin, so devices never exchange a byte
+  on the request path.  The v1 service sharded every micro-batch's
+  batch axis over the whole mesh (GSPMD collectives + a per-mesh
+  compile in the hot loop) and its measured device scaling *inverted*
+  — 15.2 → 3.5 → 0.67 req/s at 1 → 2 → 8 host devices in
+  BENCH_pr5.json; streaming replaces that with embarrassingly parallel
+  placement.
+* **overlap** — dispatch is split submit/wait
+  (:func:`repro.core.solver.solve_batch_submit`): the host-side phase
+  (pad, stack, netlist build, error model, assembly) runs eagerly,
+  then the device solve is *dispatched* and the scheduler moves on to
+  the next micro-batch's host build while the device computes (JAX
+  async dispatch — no threads).  Each stream holds up to
+  ``inflight_per_device`` dispatched micro-batches (2 = classic double
+  buffering; 1 degrades to the serial build→solve→unpack loop);
+  harvest order is dispatch FIFO.  ``stats()`` splits the wall clock
+  into ``host_build_s`` / ``device_wait_s`` / ``unpack_s`` — on a
+  saturated stream the device wait is the residual the host could not
+  hide.
+* **pattern reuse** — each bucket caches one stamp pattern, reused
+  across micro-batches and streams.  ``analog_2n`` slot sets are
+  normalized per ``(n, design)``, so the first derivation covers every
+  later micro-batch; ``analog_n`` slot sets are data-dependent, but a
+  union pattern is still sound to cache (a stamped-but-inactive slot
+  is an exact no-op: zero conductance, and the per-system
+  ``pair_active`` mask keeps its amp dynamics decoupled) — the cached
+  union only *grows*, via ``pattern_merge``, when a micro-batch stamps
+  a slot the cache lacks.  ``stats()`` reports ``pattern_derivations``
+  per bucket: 1 for ``analog_2n`` buckets by construction, and for
+  ``analog_n`` it stops climbing once the cached union covers the
+  stream's slot population.
 
 Single-host caveats (see ROADMAP): netlist building and result
-unpacking stay host-side; the settle sweep's Pallas kernels run
-unsharded; preliminary-design (``analog_n``) buckets re-derive their
-union pattern per micro-batch because that design's slot set is
-data-dependent.
+unpacking stay host-side (they are the overlap *budget*, not dead
+time); the settle sweep's Pallas kernels run on the stream's device
+but hold their stream for the full transient analysis — one reason
+settling requests bucket at exact ``n``.
 """
 
 from __future__ import annotations
@@ -51,11 +87,13 @@ from repro.core.operating_point import NonIdealities
 from repro.core.solver import (
     ANALOG_METHODS,
     DIGITAL_METHODS,
+    PendingBatchSolve,
     SolveResult,
     _build_nets,
-    solve_batch,
+    solve_batch_submit,
 )
 from repro.core.specs import DEFAULT_PARAMS, OPAMPS, CircuitParams, OpAmpSpec
+from repro.serving.engine import AdmissionQueue
 
 # nominal voltage of padded unknowns; in-range for the paper's
 # x ~ U[-0.5, 0.5] V protocol, nonzero so pad nodes keep a supply leg
@@ -127,6 +165,10 @@ class SolveTicket:
     b: np.ndarray
     sig: SolveSignature
     result: SolveResult | None = None
+    # admission stamps (set by AdmissionQueue.push)
+    priority: int = 0
+    deadline: float | None = None
+    seq: int = 0
 
     @property
     def n(self) -> int:
@@ -143,7 +185,18 @@ class _BucketPipeline:
     micro_batches: int = 0
     systems: int = 0
     fill_slots: int = 0
+    pattern_derivations: int = 0
     pattern_rebuilds: int = 0
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched micro-batch awaiting harvest on its stream."""
+
+    pipe: _BucketPipeline
+    tickets: list
+    pending: PendingBatchSolve
+    dev: int
 
 
 def pad_system(
@@ -182,18 +235,26 @@ def pad_system(
 
 
 class SolveService:
-    """Queue -> bucket -> pad -> batched sharded dispatch.
+    """Queue -> bucket -> pad -> per-device streamed async dispatch.
 
     Parameters
     ----------
     batch_slots:
-        Systems per device micro-batch.  Fixed: partial buckets are
-        filled by repeating the last system (counted in ``stats``), so
-        every bucket compiles exactly one ``(batch_slots, n_pad)``
-        pipeline.  Rounded up to a multiple of the mesh's device count.
-    mesh / n_devices:
-        Optional 1-d solver mesh (or a device count to build one) — the
-        micro-batch batch axis is sharded over it.
+        Systems per device micro-batch.  Fixed: partial micro-batches
+        are filled by repeating the last system (counted in ``stats``),
+        so every bucket compiles exactly one ``(batch_slots, n_pad)``
+        pipeline per device.
+    mesh / n_devices / devices:
+        The device streams.  ``devices`` is an explicit list; ``mesh``
+        contributes its device order (the v1 constructor signature —
+        the mesh is *not* used for GSPMD sharding any more);
+        ``n_devices`` takes the first N visible devices.  Default: the
+        default device alone.
+    inflight_per_device:
+        Dispatched-but-unharvested micro-batches each stream may hold.
+        2 (default) double-buffers: the host builds micro-batch ``i+1``
+        while the device solves ``i``.  1 disables the overlap (serial
+        reference mode, used by the benchmark's overlap probe).
     pad_sizes:
         The bucketing grid for ``n``; off-grid sizes round up to the
         next multiple of ``PAD_QUANTUM``.
@@ -205,24 +266,29 @@ class SolveService:
         batch_slots: int = 8,
         mesh=None,
         n_devices: int | None = None,
+        devices=None,
+        inflight_per_device: int = 2,
         pad_sizes: tuple[int, ...] = DEFAULT_PAD_SIZES,
         params: CircuitParams = DEFAULT_PARAMS,
     ):
-        if mesh is None and n_devices is not None:
-            from repro.distributed.sharding import solver_mesh
+        from repro.distributed.sharding import stream_devices
 
-            mesh = solver_mesh(n_devices)
-        self.mesh = mesh
-        n_dev = int(mesh.devices.size) if mesh is not None else 1
-        # fixed shapes + even device division: one jit per bucket
-        self.batch_slots = max(batch_slots, n_dev)
-        self.batch_slots += (-self.batch_slots) % n_dev
+        self.devices = stream_devices(
+            mesh=mesh, devices=devices, n_devices=n_devices
+        )
+        if inflight_per_device < 1:
+            raise ValueError("inflight_per_device must be >= 1")
+        self.inflight_per_device = int(inflight_per_device)
+        self.batch_slots = max(1, int(batch_slots))
         self.pad_sizes = tuple(sorted(pad_sizes))
         self.params = params
-        self.queue: list[SolveTicket] = []
+        self.queue = AdmissionQueue()
         self._pipelines: dict[tuple, _BucketPipeline] = {}
         self._next_rid = 0
         self._wall_s = 0.0
+        self._host_build_s = 0.0
+        self._device_wait_s = 0.0
+        self._unpack_s = 0.0
         self._real_sq = 0.0      # sum n^2 over served systems (stats)
 
     # ------------------------------------------------------------ intake
@@ -262,11 +328,16 @@ class SolveService:
         settle_dt_policy: str = "diag",
         tol: float = 1e-10,
         max_iter: int = 10000,
+        priority: int = 0,
+        deadline: float | None = None,
     ) -> int:
         """Queue one system; returns the request id.
 
         Nothing is solved until :meth:`drain` — submission only
-        validates shapes and records the batch-compatibility signature.
+        validates shapes, records the batch-compatibility signature,
+        and stamps the admission order (``priority`` admits first,
+        earliest ``deadline`` within a priority class, FIFO on ties —
+        see :func:`repro.serving.engine.admission_key`).
         """
         a = np.asarray(a, dtype=np.float64)
         b = np.asarray(b, dtype=np.float64)
@@ -297,7 +368,10 @@ class SolveService:
         ).normalized()
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(SolveTicket(rid=rid, a=a, b=b, sig=sig))
+        self.queue.push(
+            SolveTicket(rid=rid, a=a, b=b, sig=sig),
+            priority=priority, deadline=deadline,
+        )
         return rid
 
     # ---------------------------------------------------------- dispatch
@@ -310,19 +384,24 @@ class SolveService:
         a_pad: np.ndarray,
         b_pad: np.ndarray,
     ) -> tuple[engine.StampPattern | None, list | None]:
-        """The bucket's cached stamp pattern, re-merged only on a miss.
+        """The bucket's cached stamp pattern, re-derived only on a miss.
 
         ``analog_2n`` slot sets are normalized per ``(n, design)`` (all
         pair slots + the union of observed ground slots), so after the
-        first micro-batch this is a pure cache read.  ``analog_n`` slot
-        sets are data-dependent — those buckets return ``(None, None)``
-        and let ``solve_batch`` derive the per-micro-batch union.
+        first micro-batch this is a pure cache read
+        (``pattern_derivations == 1``).  ``analog_n`` slot sets are
+        data-dependent, but caching the union is still sound — a
+        stamped-but-inactive slot is an exact no-op (zero conductance;
+        the per-system ``pair_active`` mask keeps its amp dynamics
+        decoupled) — so those buckets also serve from cache and only
+        re-derive + ``pattern_merge`` when a micro-batch stamps a slot
+        the cached union lacks.
 
         The netlists built for the cover check are returned and handed
         to ``solve_batch`` so each micro-batch builds them exactly once.
         """
         sig = pipe.sig
-        if sig.method != "analog_2n":
+        if sig.method not in ANALOG_METHODS:
             return None, None
         nets = _build_nets(
             a_pad, b_pad, sig.method, d_policy=sig.d_policy,
@@ -331,6 +410,7 @@ class SolveService:
         if pipe.pattern is not None and engine.pattern_covers(pipe.pattern, nets):
             return pipe.pattern, nets
         union = engine.pattern_union(nets, sig.opamp)
+        pipe.pattern_derivations += 1
         if pipe.pattern is None:
             pipe.pattern = union
         else:
@@ -339,8 +419,14 @@ class SolveService:
         return pipe.pattern, nets
 
     def _dispatch_micro_batch(
-        self, pipe: _BucketPipeline, tickets: list[SolveTicket]
-    ) -> None:
+        self, pipe: _BucketPipeline, tickets: list[SolveTicket], dev: int
+    ) -> _InFlight:
+        """Host phase of one micro-batch + async dispatch to stream ``dev``.
+
+        Returns without blocking on the device — the scheduler builds
+        the next micro-batch while this one's solve runs.
+        """
+        t_build = time.perf_counter()
         sig = pipe.sig
         n_real = len(tickets)
         fill = self.batch_slots - n_real
@@ -351,7 +437,7 @@ class SolveService:
         b_stack = np.stack([p[1] for p in padded])
 
         pattern, nets = self._bucket_pattern(pipe, a_stack, b_stack)
-        batch = solve_batch(
+        pending = solve_batch_submit(
             a_stack,
             b_stack,
             method=sig.method,
@@ -368,55 +454,133 @@ class SolveService:
             tol=sig.tol,
             max_iter=sig.max_iter,
             pattern=pattern,
-            mesh=self.mesh,
+            device=self.devices[dev],
         )
-        for k, ticket in enumerate(tickets):
-            res = batch[k]
-            res.x = res.x[: ticket.n]           # mask the pad solution out
-            res.info["service_n_padded"] = pipe.n_pad
-            res.info["service_batch_slots"] = self.batch_slots
-            ticket.result = res
-            self._real_sq += float(ticket.n) ** 2
         pipe.micro_batches += 1
         pipe.systems += n_real
         pipe.fill_slots += fill
+        self._host_build_s += time.perf_counter() - t_build
+        return _InFlight(pipe=pipe, tickets=tickets, pending=pending, dev=dev)
+
+    def _unpack_micro_batch(self, pipe, tickets, batch) -> None:
+        """Materialize per-ticket results from one harvested micro-batch.
+
+        Vectorized: one batched slice (+ ``tolist`` bulk conversion)
+        per result field and per ``info`` key, instead of the v1
+        per-ticket ``batch[k]`` loop that re-entered the
+        ``BatchSolveResult.__getitem__`` normalization once per ticket
+        per key.  ``x`` rows are handed out as views into the single
+        micro-batch array, trimmed to each ticket's real ``n`` (the pad
+        solution is masked out).
+        """
+        n_real = len(tickets)
+        xs = np.asarray(batch.x)
+        stable = np.asarray(batch.stable)[:n_real].tolist()
+        settle = (
+            None if batch.settle_time is None
+            else np.asarray(batch.settle_time)[:n_real].tolist()
+        )
+        cols: dict[str, list] = {}
+        shared: dict[str, Any] = {}
+        for key, v in batch.info.items():
+            if isinstance(v, np.ndarray) and v.ndim >= 1:
+                cols[key] = v[:n_real].tolist()
+            else:
+                # scalar shared by the batch; normalize numpy scalars
+                # exactly as BatchSolveResult.__getitem__ would
+                shared[key] = batch._info_entry(v, 0)
+        for i, ticket in enumerate(tickets):
+            info = {
+                k: (cols[k][i] if k in cols else shared[k])
+                for k in batch.info
+            }
+            info["service_n_padded"] = pipe.n_pad
+            info["service_batch_slots"] = self.batch_slots
+            ticket.result = SolveResult(
+                x=xs[i, : ticket.n],
+                method=batch.method,
+                stable=bool(stable[i]),
+                settle_time=None if settle is None else float(settle[i]),
+                info=info,
+            )
+            self._real_sq += float(ticket.n) ** 2
+
+    def _harvest(
+        self, flight: _InFlight, out: dict[int, SolveResult],
+        per_dev: list[int],
+    ) -> None:
+        """Block on one in-flight micro-batch and deliver its results."""
+        t_wait = time.perf_counter()
+        batch = flight.pending.wait()
+        self._device_wait_s += time.perf_counter() - t_wait
+        t_unpack = time.perf_counter()
+        self._unpack_micro_batch(flight.pipe, flight.tickets, batch)
+        self._unpack_s += time.perf_counter() - t_unpack
+        for t in flight.tickets:
+            out[t.rid] = t.result
+        per_dev[flight.dev] -= 1
 
     def drain(self) -> dict[int, SolveResult]:
         """Solve everything queued; returns ``{rid: SolveResult}``.
 
-        Buckets run in arrival order of their first request; within a
-        bucket, micro-batches of ``batch_slots`` systems dispatch
-        through the bucket's cached pipeline.  Results are handed to
-        the caller and not retained by the service (a long-running
-        stream must not accumulate solved systems).  If one micro-batch
-        raises (e.g. a system violating the transform's guarantee),
-        every not-yet-dispatched request stays queued for the next
-        ``drain`` instead of being silently discarded.
+        Tickets leave the queue in admission order
+        (priority/deadline/FIFO) and group into buckets; each bucket's
+        micro-batches are assigned to the device streams round-robin.
+        A stream holding ``inflight_per_device`` dispatched
+        micro-batches back-pressures the scheduler: its oldest
+        micro-batch is harvested (device wait + vectorized unpack)
+        before the next host build starts — with 2 in-flight slots the
+        host build of micro-batch ``i+1`` overlaps the device solve of
+        ``i`` on every stream.  Results are handed to the caller and
+        not retained by the service (a long-running stream must not
+        accumulate solved systems).  If any micro-batch raises (e.g. a
+        system violating the transform's guarantee), the caller
+        receives nothing, so EVERY ticket of this drain — including
+        already-harvested ones, which just recompute — is re-queued at
+        its original admission rank instead of being silently
+        discarded.
         """
         t0 = time.perf_counter()
-        queued = self.queue
-        self.queue = []
+        queued = self.queue.pop_all()
+        if not queued:
+            return {}
         buckets: dict[tuple, list[SolveTicket]] = {}
         for ticket in queued:
             buckets.setdefault(self._bucket_key(ticket), []).append(ticket)
 
+        # fixed-shape micro-batches, bucket-major in admission order of
+        # each bucket's head request
+        micro: list[tuple[_BucketPipeline, list[SolveTicket]]] = []
+        for key, tickets in buckets.items():
+            n_pad, sig = key
+            pipe = self._pipelines.setdefault(
+                key, _BucketPipeline(n_pad=n_pad, sig=sig)
+            )
+            for start in range(0, len(tickets), self.batch_slots):
+                micro.append((pipe, tickets[start:start + self.batch_slots]))
+
         out: dict[int, SolveResult] = {}
+        n_dev = len(self.devices)
+        inflight: list[_InFlight] = []          # dispatch-FIFO harvest order
+        per_dev = [0] * n_dev
         try:
-            for key, tickets in buckets.items():
-                n_pad, sig = key
-                pipe = self._pipelines.setdefault(
-                    key, _BucketPipeline(n_pad=n_pad, sig=sig)
-                )
-                for start in range(0, len(tickets), self.batch_slots):
-                    chunk = tickets[start:start + self.batch_slots]
-                    self._dispatch_micro_batch(pipe, chunk)
-                    for t in chunk:
-                        out[t.rid] = t.result
+            for i, (pipe, chunk) in enumerate(micro):
+                dev = i % n_dev
+                # back-pressure: free a slot on this stream by
+                # harvesting globally-oldest flights (round-robin
+                # dispatch makes the oldest flight this stream's)
+                while per_dev[dev] >= self.inflight_per_device:
+                    self._harvest(inflight.pop(0), out, per_dev)
+                inflight.append(self._dispatch_micro_batch(pipe, chunk, dev))
+                per_dev[dev] += 1
+            while inflight:
+                self._harvest(inflight.pop(0), out, per_dev)
         except BaseException:
             # the caller receives nothing from a raising drain, so put
-            # EVERY ticket of this drain back (already-served ones just
-            # recompute next time) — nothing is silently discarded
-            self.queue = list(queued) + self.queue
+            # EVERY ticket of this drain back at its original admission
+            # rank (already-served ones just recompute next time) —
+            # nothing is silently discarded
+            self.queue.requeue(queued)
             self._wall_s += time.perf_counter() - t0
             raise
         self._wall_s += time.perf_counter() - t0
@@ -425,13 +589,19 @@ class SolveService:
     # ------------------------------------------------------------- stats
     @property
     def stats(self) -> dict[str, Any]:
-        """Service counters: per-bucket fills and the pad-overhead model.
+        """Service counters: per-bucket fills, the pad-overhead model,
+        and the overlap decomposition.
 
         ``pad_overhead`` is the dense-work ratio
         ``sum((systems + fill_slots) * n_pad^2) / sum(n^2)``: assembly
         and DC-solve cost scale with the *padded* size, over every
         dispatched slot including the repeat-fills — the full price
-        paid for shape-stable pipelines.
+        paid for shape-stable pipelines.  ``host_build_s`` /
+        ``device_wait_s`` / ``unpack_s`` decompose ``wall_s``:
+        ``device_wait_s`` is the device time the overlapped host phases
+        could not hide.  ``pattern_derivations`` counts
+        ``pattern_union`` calls per bucket (1 proves the cache served
+        every later micro-batch on every stream).
         """
         per_bucket = {}
         pad_sq = 0.0
@@ -446,6 +616,7 @@ class SolveService:
                 "micro_batches": pipe.micro_batches,
                 "systems": pipe.systems,
                 "fill_slots": pipe.fill_slots,
+                "pattern_derivations": pipe.pattern_derivations,
                 "pattern_rebuilds": pipe.pattern_rebuilds,
             }
             total += pipe.systems
@@ -458,6 +629,10 @@ class SolveService:
             "buckets": per_bucket,
             "pad_overhead": pad_sq / real_sq if real_sq else 1.0,
             "wall_s": self._wall_s,
-            "devices": int(self.mesh.devices.size) if self.mesh is not None else 1,
+            "host_build_s": self._host_build_s,
+            "device_wait_s": self._device_wait_s,
+            "unpack_s": self._unpack_s,
+            "devices": len(self.devices),
+            "inflight_per_device": self.inflight_per_device,
             "batch_slots": self.batch_slots,
         }

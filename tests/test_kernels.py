@@ -17,7 +17,10 @@ DTYPES = [jnp.float32, jnp.bfloat16]
 
 
 def _tol(dt):
-    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+    # f32 headroom for a k=513 dot: BLAS accumulation order varies with
+    # the host's thread count, and the worst element lands just above
+    # 2e-5 on single-core runners
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=5e-5, atol=5e-5)
 
 
 @pytest.mark.parametrize("m,k,b", SHAPES_MVM)

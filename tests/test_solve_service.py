@@ -209,12 +209,58 @@ def test_service_bucket_pipeline_reuses_pattern():
     assert pipe.micro_batches == 3
     assert pipe.pattern is not None
     assert pipe.pattern_rebuilds == 0
+    # the 2n slot set is normalized per (n, design): ONE union derivation
+    # serves every micro-batch of the bucket
+    assert pipe.pattern_derivations == 1
     pat_first = pipe.pattern
     for _ in range(2):                           # later drain, same bucket
         a, x, b = _sys(rng, 10)
         svc.submit(a, b, method="analog_2n")
     svc.drain()
     assert pipe.pattern is pat_first and pipe.micro_batches == 4
+    assert pipe.pattern_derivations == 1
+    assert svc.stats["buckets"]["n16/analog_2n"]["pattern_derivations"] == 1
+
+
+def _tridiag_spd(n):
+    a = np.zeros((n, n))
+    idx = np.arange(n - 1)
+    a[idx, idx + 1] = a[idx + 1, idx] = -1.0
+    np.fill_diagonal(a, 3.0)
+    return a
+
+
+def test_service_analog_n_pattern_cached_and_merge_is_sound():
+    """analog_n slot sets are data-dependent, but the bucket caches the
+    union pattern: repeated-sparsity streams derive once, a micro-batch
+    stamping new slots grows the union via merge — and the merged
+    pattern's extra inactive slots are exact no-ops (results still match
+    the direct per-system solve)."""
+    rng = np.random.default_rng(20)
+    svc = SolveService(batch_slots=2)
+    a_sp = _tridiag_spd(8)                       # sparse slot population
+    cases = []
+    for _ in range(4):                           # 2 micro-batches, 1 pattern
+        x, b = random_rhs_from_solution(rng, a_sp)
+        cases.append((a_sp, b, svc.submit(a_sp, b, method="analog_n")))
+    res = svc.drain()
+    (key, pipe), = svc._pipelines.items()
+    assert pipe.micro_batches == 2
+    assert pipe.pattern_derivations == 1         # cache hit on batch 2
+    assert pipe.pattern_rebuilds == 0
+
+    a_dense, x, b = _sys(rng, 8)                 # stamps slots tridiag lacks
+    cases.append((a_dense, b, svc.submit(a_dense, b, method="analog_n")))
+    x2, b2 = random_rhs_from_solution(rng, a_sp)
+    cases.append((a_sp, b2, svc.submit(a_sp, b2, method="analog_n")))
+    res.update(svc.drain())
+    assert pipe.pattern_derivations == 2         # one miss -> one merge
+    assert pipe.pattern_rebuilds == 1
+    st = svc.stats["buckets"]["n8/analog_n"]
+    assert st["pattern_derivations"] == 2
+    for a, b, rid in cases:
+        direct = solve(a, b, method="analog_n")
+        np.testing.assert_allclose(res[rid].x, direct.x, rtol=0.0, atol=1e-9)
 
 
 def test_service_custom_opamp_spec():
@@ -345,11 +391,121 @@ def test_service_drain_requeues_on_failure_and_retains_no_results():
     assert not hasattr(svc, "results")          # no unbounded retention
 
     # the service still answers after the caller removes the poison
-    svc.queue = [t for t in svc.queue if not np.isnan(t.a).any()]
+    dropped = svc.queue.discard(lambda t: np.isnan(t.a).any())
+    assert len(dropped) == 1
     res = svc.drain()
     for rid in (good, good2):
         np.testing.assert_allclose(res[rid].x, np.linalg.solve(a, b),
                                    rtol=1e-6, atol=1e-9)
+
+
+def test_service_priority_deadline_admission_order():
+    """Under a saturated bucket the queue admits by priority first,
+    earliest-deadline within a class, FIFO last — observed as the
+    micro-batch dispatch order."""
+    rng = np.random.default_rng(17)
+    a, x, b = _sys(rng, 6)
+    svc = SolveService(batch_slots=2)
+    rid_fifo = svc.submit(a, b, method="cholesky")
+    rid_late = svc.submit(a, b, method="cholesky", deadline=1.0)
+    rid_hi = svc.submit(a, b, method="cholesky", priority=5)
+    rid_soon = svc.submit(a, b, method="cholesky", deadline=0.5)
+
+    order = []
+    orig = svc._dispatch_micro_batch
+
+    def spy(pipe, chunk, dev):
+        order.extend(t.rid for t in chunk)
+        return orig(pipe, chunk, dev)
+
+    svc._dispatch_micro_batch = spy
+    res = svc.drain()
+    assert order == [rid_hi, rid_soon, rid_late, rid_fifo]
+    assert set(res) == {rid_fifo, rid_late, rid_hi, rid_soon}
+
+
+def test_service_midflight_failure_requeues_every_ticket_at_rank():
+    """A device-side fault surfacing at harvest (not host build) still
+    re-queues EVERY ticket of the drain — including already-delivered
+    ones — at original admission rank."""
+    import repro.serving.solve_service as ss
+
+    rng = np.random.default_rng(18)
+    svc = SolveService(batch_slots=1, inflight_per_device=2)
+    systems = [_sys(rng, 6) for _ in range(4)]
+    rids = [svc.submit(a, b, method="cholesky") for a, x, b in systems]
+
+    orig = ss.solve_batch_submit
+    calls = {"n": 0}
+
+    def faulting(*args, **kw):
+        pending = orig(*args, **kw)
+        calls["n"] += 1
+        if calls["n"] == 3:                      # fault lands mid-stream
+
+            def boom():
+                raise RuntimeError("device fault")
+
+            pending._finalize = boom
+        return pending
+
+    ss.solve_batch_submit = faulting
+    try:
+        with pytest.raises(RuntimeError, match="device fault"):
+            svc.drain()
+    finally:
+        ss.solve_batch_submit = orig
+    # micro-batches 1-2 were harvested before the fault; they are back
+    # anyway, and the queue replays in the original order
+    assert [t.rid for t in svc.queue.pop_all()] == rids
+
+
+def test_service_double_buffered_dispatch_parity():
+    """inflight_per_device=2 (overlapped) and =1 (serial reference)
+    produce bitwise-identical results, both within 1e-9 of the direct
+    solve — the overlap changes scheduling, never the computation."""
+    rng = np.random.default_rng(19)
+    cases = [_sys(rng, 10) for _ in range(6)]
+    got = {}
+    for inflight in (1, 2):
+        svc = SolveService(batch_slots=2, inflight_per_device=inflight)
+        rids = [svc.submit(a, b, method="analog_2n") for a, x, b in cases]
+        res = svc.drain()
+        got[inflight] = [res[r].x for r in rids]
+        for (a, x, b), r in zip(cases, rids):
+            direct = solve(a, b, method="analog_2n")
+            np.testing.assert_allclose(
+                res[r].x, direct.x, rtol=0.0, atol=1e-9
+            )
+    for x_serial, x_overlap in zip(got[1], got[2]):
+        np.testing.assert_array_equal(x_serial, x_overlap)
+
+
+def test_service_vectorized_unpack_matches_batch_getitem():
+    """The batched-gather unpack delivers exactly what the per-ticket
+    BatchSolveResult.__getitem__ path did: same values, same python
+    scalar types, pad masked out."""
+    rng = np.random.default_rng(21)
+    cases = [_sys(rng, 6) for _ in range(2)]     # 2 real + 1 repeat-fill
+    svc = SolveService(batch_slots=3)
+    rids = [svc.submit(a, b, method="analog_2n") for a, x, b in cases]
+    res = svc.drain()
+
+    padded = [pad_system(a, b, 8) for a, x, b in cases]
+    padded.append(padded[-1])                    # the service's repeat-fill
+    batch = solve_batch(
+        np.stack([p[0] for p in padded]), np.stack([p[1] for p in padded]),
+        method="analog_2n",
+    )
+    for k, rid in enumerate(rids):
+        ref = batch[k]
+        got = res[rid]
+        np.testing.assert_array_equal(got.x, ref.x[:6])
+        assert got.stable == ref.stable and got.method == ref.method
+        assert got.settle_time is None and ref.settle_time is None
+        for key, want in ref.info.items():
+            assert type(got.info[key]) is type(want), key
+            assert got.info[key] == want, key
 
 
 def test_service_analog_n_normalization():
@@ -419,12 +575,16 @@ _SUBPROCESS_PROG = textwrap.dedent("""
         direct = solve(a, b, method=m, tol=1e-12)
         worst = max(worst, float(np.abs(res[rid].x - direct.x).max()))
     assert worst < 1e-9, worst
-    print(json.dumps({"worst": worst, "devices": svc.stats["devices"]}))
+    st = svc.stats
+    assert st["host_build_s"] > 0 and st["device_wait_s"] >= 0
+    print(json.dumps({"worst": worst, "devices": st["devices"]}))
 """)
 
 
 @pytest.mark.slow
-def test_service_sharded_over_forced_devices():
+def test_service_streams_over_forced_devices():
+    """mesh= still resolves the device streams (v1 constructor compat);
+    round-robin placement over 4 forced host devices keeps 1e-9 parity."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     out = subprocess.run(
