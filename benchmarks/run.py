@@ -19,14 +19,16 @@ against this file.
 
 The ``service`` phase (gate with ``--service`` / ``--no-service``;
 default mirrors the pr2 gate) runs the streamed solve-service
-benchmark — slot sweep, device-stream sweep, overlap probe — and
-writes its throughput/parity baseline to ``BENCH_pr6.json``
+benchmark — slot sweep, device-stream sweep, overlap probe, plus
+the seeded fault-injection sweep (req/s at 0%/5%/20% fault rates) —
+and writes its throughput/parity baseline to ``BENCH_pr7.json``
 (``--json-service`` to relocate).  ``--baseline PATH`` additionally
-diffs that document against a committed ``BENCH_pr5.json`` /
-``BENCH_pr6.json`` and fails the run on a >25% regression of
-requests/sec, pad overhead or sweep wall time (the device-scaling
-monotonicity check runs whether or not a baseline file is given);
-``--smoke`` shrinks the service stream to the CI-sized pass.
+diffs that document against a committed prior ``BENCH_pr*.json`` and
+fails the run on a >25% regression of requests/sec, pad overhead,
+sweep wall time or fault-mode throughput retention (the
+device-scaling monotonicity check runs whether or not a baseline file
+is given); ``--smoke`` shrinks the service stream to the CI-sized
+pass.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -72,7 +74,7 @@ def main() -> None:
                     help="run the PR-2 perf trajectory (sparse n-sweep, "
                          "dense-vs-ELL, parity); default: only on "
                          "unfiltered runs")
-    ap.add_argument("--json-service", default="BENCH_pr6.json",
+    ap.add_argument("--json-service", default="BENCH_pr7.json",
                     help="solve-service baseline output path ('' to skip)")
     ap.add_argument("--service", default=None,
                     action=argparse.BooleanOptionalAction,
@@ -84,8 +86,8 @@ def main() -> None:
     ap.add_argument("--baseline", default=None, nargs="?", const="auto",
                     help="gate the service phase against a committed "
                          "BENCH_*.json (>25%% regression fails); bare "
-                         "--baseline picks BENCH_pr6.json, falling back "
-                         "to BENCH_pr5.json")
+                         "--baseline picks the newest committed "
+                         "BENCH_pr7/pr6/pr5.json")
     args = ap.parse_args()
 
     from benchmarks.common import emit
@@ -138,7 +140,8 @@ def main() -> None:
         from benchmarks.solve_service import apply_gate, build_doc
 
         t5 = time.time()
-        doc_svc = build_doc(smoke=bool(args.smoke or not args.full))
+        doc_svc = build_doc(smoke=bool(args.smoke or not args.full),
+                            faults=True)
         print(f"service,wall_s,{time.time() - t5:.1f}")
         if args.json_service:
             with open(args.json_service, "w") as fh:
@@ -147,7 +150,8 @@ def main() -> None:
         baseline_path = args.baseline or ""
         if baseline_path == "auto":
             baseline_path = next(
-                (p for p in ("BENCH_pr6.json", "BENCH_pr5.json")
+                (p for p in ("BENCH_pr7.json", "BENCH_pr6.json",
+                              "BENCH_pr5.json")
                  if os.path.exists(p)), "",
             )
             if baseline_path:

@@ -1,16 +1,20 @@
-"""Solve-service throughput benchmark (the PR-6 streaming service).
+"""Solve-service throughput benchmark (streaming + fault tolerance).
 
 Streams a mixed-size request set (n in {16, 64, 192}, both analog
 designs plus a digital baseline) through :class:`repro.serving.SolveService`
 and records steady-state requests/sec versus batch-slot count and
-device-stream count into ``BENCH_pr6.json``.  Every request's solution
+device-stream count into ``BENCH_pr7.json``.  Every request's solution
 is checked against a direct :func:`repro.core.solver.solve` — any
 mismatch beyond tolerance is a benchmark *failure* (nonzero exit),
 which is how the CI forced-multi-device smoke job guards the streamed
-dispatch path.
+dispatch path.  ``--faults`` adds the degraded-mode sweep: the same
+stream under a seeded chaos injector at 0%/5%/20% fault rates,
+recording the throughput retained while the retry/bisection/breaker
+machinery keeps delivery exactly-once (delivered solutions still
+parity-audit; un-savable tickets land as counted structured errors).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        PYTHONPATH=src:. python -m benchmarks.solve_service --smoke
+        PYTHONPATH=src:. python -m benchmarks.solve_service --smoke --faults
 
 Measurement protocol (v2):
 
@@ -32,12 +36,16 @@ Measurement protocol (v2):
   only): on a saturated stream ``device_wait_s`` is the device time
   the overlapped host phases could not hide.
 
-``--baseline BENCH_pr5.json`` (or a prior ``BENCH_pr6.json``) gates
+``--baseline BENCH_pr6.json`` (or any prior ``BENCH_pr*.json``) gates
 the run against a committed baseline: >25% regression on
-requests/sec, pad overhead or sweep wall time fails the run.
-Absolute series compare only between runs of the same ``--smoke``
-context; the dimensionless device-scaling curve and overlap speedup
-always compare.  ``--smoke`` shrinks the stream (CI wall-clock) but
+requests/sec, pad overhead, sweep wall time or fault-mode throughput
+retention fails the run.
+Absolute series — and the device-scaling curve, whose honest value
+depends on the stream size — compare only between runs of the same
+``--smoke`` context; the overlap speedup and fault-mode throughput
+retention always compare, and the device-scaling *monotonicity* check
+guards the v1 inversion anti-result in every run regardless of
+context.  ``--smoke`` shrinks the stream (CI wall-clock) but
 keeps the full size/method mix and the >= 2-device sweep point.  The
 analog_n design rides at n=16 only: its preliminary netlist carries
 O(n^2) cells, so larger sizes belong to the 2n design by construction
@@ -53,11 +61,17 @@ import time
 import numpy as np
 
 PARITY_ATOL = 1e-9
-BENCH_SCHEMA = "bench_pr6.v1"
+BENCH_SCHEMA = "bench_pr7.v1"
+# degraded-throughput sweep points for --faults mode
+FAULT_RATES = (0.0, 0.05, 0.20)
 # baseline gate: fail on >25% regression of any compared series
 REGRESSION_TOL = 0.25
-# device-scaling monotonicity: allow this much timing noise per step
-SCALING_DIP_TOL = 0.08
+# device-scaling monotonicity: allow this much timing noise per step.
+# Calibrated to the smoke stream, where a single point is ~0.7 s of
+# wall clock and best-of-N repeats still carry ~10% machine noise; the
+# anti-result this check guards (the v1 GSPMD inversion) was a 4-20x
+# collapse, far outside any noise band.
+SCALING_DIP_TOL = 0.15
 
 
 def build_stream(seed: int, repeat: int) -> list[dict]:
@@ -93,6 +107,8 @@ def run_service(
     inflight: int = 2,
     warmup: bool = True,
     check_parity: bool = True,
+    fault_rate: float = 0.0,
+    fault_seed: int = 0,
 ) -> dict:
     """One steady-state service pass; returns throughput + parity stats.
 
@@ -101,19 +117,37 @@ def run_service(
     the timed pass then measures serving, not compilation.  The
     round-robin assignment is deterministic, so the warmup pass touches
     exactly the (bucket, device) pairs the timed pass uses.
+
+    ``fault_rate`` arms a seeded chaos injector for the timed pass
+    (warmup stays clean): the total rate splits 50/25/25 over device
+    faults, NaN solutions and host build errors.  Tickets the retry
+    machinery could not save land as structured ``SolveError`` answers
+    and are counted (``errors``), not parity-audited; every *delivered*
+    solution must still match the direct solve exactly.
     """
     from repro.core.solver import solve
+    from repro.serving.faults import FaultInjector, FaultPlan, SolveError
     from repro.serving.solve_service import SolveService
 
     svc = SolveService(
         batch_slots=batch_slots,
         n_devices=n_devices,
         inflight_per_device=inflight,
+        breaker_backoff_s=0.01,
     )
     if warmup:
         for s in systems:
             svc.submit(s["a"], s["b"], method=s["method"])
         svc.drain()
+    if fault_rate > 0.0:
+        svc.fault_injector = FaultInjector(FaultPlan(
+            seed=fault_seed,
+            rates={
+                "device_fault": fault_rate * 0.50,
+                "nonfinite": fault_rate * 0.25,
+                "build_error": fault_rate * 0.25,
+            },
+        ))
     base = svc.stats
     rids = [svc.submit(s["a"], s["b"], method=s["method"]) for s in systems]
     t0 = time.perf_counter()
@@ -122,8 +156,11 @@ def run_service(
 
     worst = 0.0
     failures = []
+    errors = sum(isinstance(r, SolveError) for r in results.values())
     if check_parity:
         for rid, s in zip(rids, systems):
+            if isinstance(results[rid], SolveError):
+                continue
             direct = solve(s["a"], s["b"], method=s["method"])
             err = float(np.abs(results[rid].x - direct.x).max())
             worst = max(worst, err)
@@ -152,15 +189,25 @@ def run_service(
         ),
         "parity_worst": worst,
         "parity_failures": failures,
+        # degraded-mode accounting (all zero on a fault-free pass)
+        "fault_rate": float(fault_rate),
+        "fault_injections": stats["fault_injections"],
+        "errors": errors,
+        "retries": stats["retries"],
+        "bisections": stats["bisections"],
+        "quarantines": stats["quarantines"],
+        "fallbacks": stats["fallbacks"],
     }
 
 
 def build_doc(
-    *, smoke: bool, seed: int = 0, slots: str = "", repeats: int = 3
+    *, smoke: bool, seed: int = 0, slots: str = "", repeats: int = 3,
+    faults: bool = False,
 ) -> dict:
-    """Run the full benchmark (slot sweep, device sweep, overlap probe)
-    and return the ``bench_pr6.v1`` document.  Shared by this CLI and
-    the ``benchmarks.run`` service phase.
+    """Run the full benchmark (slot sweep, device sweep, overlap probe,
+    and — with ``faults`` — the degraded-throughput sweep) and return
+    the ``bench_pr7.v1`` document.  Shared by this CLI and the
+    ``benchmarks.run`` service phase.
 
     Each point is best-of-``repeats``: repeat 1 pays warmup + the
     per-request parity audit, later repeats re-measure the already-hot
@@ -179,12 +226,13 @@ def build_doc(
     else:
         slot_sweep = [2, 4] if smoke else [1, 2, 4, 8]
 
-    def measure(**kw) -> dict:
-        point = run_service(systems, **kw)
+    def measure(stream: list | None = None, **kw) -> dict:
+        req = systems if stream is None else stream
+        point = run_service(req, **kw)
         samples = [point["requests_per_s"]]
         for _ in range(max(0, repeats - 1)):
             again = run_service(
-                systems, warmup=False, check_parity=False, **kw
+                req, warmup=False, check_parity=False, **kw
             )
             samples.append(again["requests_per_s"])
             if again["requests_per_s"] > point["requests_per_s"]:
@@ -243,10 +291,30 @@ def build_doc(
         ),
     }
 
+    # degraded-mode throughput: the same stream under a seeded chaos
+    # injector at increasing fault rates, over every visible stream —
+    # retries/bisections/quarantines are the throughput price paid for
+    # exactly-once delivery; delivered solutions still parity-audit
+    if faults:
+        doc["faults_sweep"] = []
+        # the per-dispatch injector needs enough micro-batches for a 5%
+        # rate to fire at all: triple the smoke stream for this sweep
+        fault_stream = build_stream(seed, repeat * 3) if smoke else systems
+        for rate in FAULT_RATES:
+            r = measure(
+                stream=fault_stream,
+                batch_slots=max(slot_sweep), n_devices=n_dev,
+                fault_rate=rate, fault_seed=seed + 1,
+            )
+            doc["faults_sweep"].append(r)
+            print(f"faults,rate={rate:.0%},{r['requests_per_s']:.3f} req/s,"
+                  f"injected={r['fault_injections']},"
+                  f"retries={r['retries']},errors={r['errors']}")
+
     doc["parity_failures"] = [
         f
         for r in (doc["slot_sweep"] + doc["device_sweep"]
-                  + [serial, overlapped])
+                  + [serial, overlapped] + doc.get("faults_sweep", []))
         for f in r["parity_failures"]
     ]
     doc["streamed_point_ran"] = any(
@@ -259,12 +327,15 @@ def build_doc(
 def extract_series(doc: dict) -> tuple[dict, dict]:
     """Named scalar series for the baseline gate.
 
-    Returns ``(contextual, free)``: *contextual* series are absolute
-    (requests/sec, pad overhead, sweep wall) and only comparable
-    between runs of the same stream context (same ``smoke`` flag);
-    *free* series are dimensionless ratios (device scaling, overlap
-    speedup) comparable across contexts.  Understands both the
-    ``bench_pr5.v1`` and ``bench_pr6.v1`` document shapes.
+    Returns ``(contextual, free)``: *contextual* series are only
+    comparable between runs of the same stream context (same ``smoke``
+    flag) — the absolute ones (requests/sec, pad overhead, sweep wall)
+    and the device-scaling ratios, whose true value depends on the
+    stream size; *free* series are dimensionless ratios (overlap
+    speedup, fault-mode throughput retention) comparable across
+    contexts.  Understands the ``bench_pr5.v1`` through
+    ``bench_pr7.v1`` document shapes (absent sections contribute no
+    series, so old baselines gate only what they measured).
     """
     ctx: dict[str, float] = {}
     free: dict[str, float] = {}
@@ -282,12 +353,36 @@ def extract_series(doc: dict) -> tuple[dict, dict]:
         ctx["sweep_wall_s"] = wall
     if rps1:
         for r in sweep:
-            free[f"scaling@dev{r['devices']}"] = (
+            # contextual, not free: the scaling ratio's TRUE value
+            # depends on the stream size (a smoke stream has too little
+            # work per point to amortize multi-stream dispatch, so its
+            # honest ratio sits near 1.0 while a full run's exceeds
+            # 1.2).  Comparing a smoke run against a full baseline on
+            # this ratio produced noise-driven false failures; the
+            # inversion anti-result is guarded in EVERY run, context
+            #-free, by check_device_scaling's monotonicity test.
+            ctx[f"scaling@dev{r['devices']}"] = (
                 float(r["requests_per_s"]) / rps1
             )
     probe = doc.get("overlap_probe")
     if probe:
         free["overlap_speedup"] = float(probe["overlap_speedup"])
+    fs = doc.get("faults_sweep") or []
+    rps0 = None
+    for r in fs:
+        p = float(r.get("fault_rate", 0.0))
+        tag = f"fault{int(round(p * 100))}"
+        ctx[f"requests_per_s@{tag}"] = float(r["requests_per_s"])
+        if p == 0.0:
+            rps0 = float(r["requests_per_s"])
+    if rps0:
+        for r in fs:
+            p = float(r.get("fault_rate", 0.0))
+            if p > 0.0:
+                # throughput retained under faults, dimensionless
+                free[f"fault_retention@fault{int(round(p * 100))}"] = (
+                    float(r["requests_per_s"]) / rps0
+                )
     return ctx, free
 
 
@@ -368,7 +463,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced stream for CI wall-clock")
-    ap.add_argument("--json", default="BENCH_pr6.json",
+    ap.add_argument("--faults", action="store_true",
+                    help="add the degraded-throughput sweep: req/s at "
+                         "0%%/5%%/20%% seeded fault injection")
+    ap.add_argument("--json", default="BENCH_pr7.json",
                     help="output path ('' to skip)")
     ap.add_argument("--slots", default="",
                     help="comma-separated slot counts (default by mode)")
@@ -382,7 +480,7 @@ def main() -> None:
     args = ap.parse_args()
 
     doc = build_doc(smoke=args.smoke, seed=args.seed, slots=args.slots,
-                    repeats=args.repeats)
+                    repeats=args.repeats, faults=args.faults)
 
     if args.json:
         with open(args.json, "w") as fh:

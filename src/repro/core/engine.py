@@ -1072,6 +1072,9 @@ def dc_solve_batch_finalize(
     z = np.asarray(z_dev)
     bad = ~np.all(np.isfinite(z), axis=1)
     if np.any(bad):
+        # JAX device buffers materialize as read-only views; copy
+        # before patching the re-solved rows in
+        z = np.array(z, dtype=np.float64)
         eye = np.eye(bss.n_states)
         for b in np.nonzero(bad)[0]:
             eps = 1e-12 * np.abs(bss.m[b]).max()

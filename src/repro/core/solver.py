@@ -111,6 +111,87 @@ class BatchSolveResult:
 ANALOG_METHODS = ("analog_2n", "analog_n")
 DIGITAL_METHODS = ("cholesky", "cg", "jacobi")
 
+# digital re-solve policies for degraded analog results ("none" disables)
+FALLBACK_METHODS = ("cholesky", "cg", "none")
+# relative-residual ceiling above which an *uncertified* analog result
+# counts as degraded (non-finite results always do)
+FALLBACK_RESIDUAL_TOL = 1e-6
+
+
+def fallback_mask(
+    x: np.ndarray,
+    a: np.ndarray,
+    b: np.ndarray,
+    certified=None,
+    *,
+    residual_tol: float = FALLBACK_RESIDUAL_TOL,
+) -> np.ndarray:
+    """Which systems of an analog batch need the digital fallback.
+
+    A system is degraded when its solution carries NaN/Inf, or when its
+    settling analysis did NOT certify (``settle_certified=False`` from
+    the spectral estimator) *and* its relative residual
+    ``||A x - b|| / ||b||`` overflows ``residual_tol`` — an uncertified
+    solve with a small residual is still a good solve (the paper's
+    guarantee is SDD-only; general SPD systems routinely settle fine
+    without a certificate), so certification alone never triggers the
+    re-solve.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    bad = ~np.isfinite(x).all(axis=1)
+    if certified is not None:
+        cert = np.asarray(certified, dtype=bool).reshape(-1)
+        check = (~cert) & (~bad)
+        if check.any():
+            r = np.einsum("bij,bj->bi", a[check], x[check]) - b[check]
+            rel = np.linalg.norm(r, axis=1) / np.maximum(
+                np.linalg.norm(b[check], axis=1), np.finfo(np.float64).tiny
+            )
+            bad[np.flatnonzero(check)[rel > residual_tol]] = True
+    return bad
+
+
+def _apply_digital_fallback(
+    result: "BatchSolveResult",
+    a: np.ndarray,
+    b: np.ndarray,
+    *,
+    method: str,
+    tol: float,
+    max_iter: int,
+    residual_tol: float,
+) -> "BatchSolveResult":
+    """Numerical graceful degradation: re-solve degraded analog systems
+    with a digital baseline, in place on ``result``.
+
+    The circuit metrics (``stable``, ``settle_time``, error model) keep
+    describing the *analog* attempt; only ``x`` rows are replaced, and
+    ``info["fallback"]`` records the per-system re-solve method (empty
+    string = the analog solution was delivered as-is).
+    """
+    bad = fallback_mask(
+        result.x, a, b, result.info.get("settle_certified"),
+        residual_tol=residual_tol,
+    )
+    if not bad.any():
+        return result
+    if method == "cholesky":
+        x_fb = np.asarray(
+            baselines.cholesky_solve_batch(jnp.asarray(a[bad]), jnp.asarray(b[bad]))
+        )
+    else:
+        x_fb = np.asarray(
+            baselines.cg_solve_batch(
+                jnp.asarray(a[bad]), jnp.asarray(b[bad]),
+                tol=tol, max_iter=max_iter,
+            ).x
+        )
+    x = np.array(result.x, dtype=np.float64, copy=True)
+    x[bad] = x_fb
+    result.x = x
+    result.info["fallback"] = np.where(bad, method, "")
+    return result
+
 
 def _build_nets(
     a: np.ndarray,
@@ -247,6 +328,8 @@ def solve_batch_submit(
     x_ref: np.ndarray | None = None,
     tol: float = 1e-10,
     max_iter: int = 10000,
+    fallback: str = "cholesky",
+    fallback_residual_tol: float = FALLBACK_RESIDUAL_TOL,
     pattern: "engine.StampPattern | None" = None,
     mesh=None,
     device=None,
@@ -286,6 +369,13 @@ def solve_batch_submit(
         raise ValueError(
             f"unknown method {method!r}: expected one of "
             f"{ANALOG_METHODS + DIGITAL_METHODS}"
+        )
+    if fallback is None:
+        fallback = "none"
+    if fallback not in FALLBACK_METHODS:
+        raise ValueError(
+            f"unknown fallback {fallback!r}: expected one of "
+            f"{FALLBACK_METHODS}"
         )
 
     spec = OPAMPS[opamp] if isinstance(opamp, str) else opamp
@@ -358,6 +448,14 @@ def solve_batch_submit(
                 # contracting slow subspace (see
                 # repro.core.spectral.SpectralBounds)
                 result.info["settle_certified"] = tr.certified
+        if fallback != "none":
+            # numerical graceful degradation: non-finite (or
+            # uncertified-with-residual-overflow) analog rows re-solve
+            # digitally, recorded per system in info["fallback"]
+            result = _apply_digital_fallback(
+                result, a, b, method=fallback, tol=tol, max_iter=max_iter,
+                residual_tol=fallback_residual_tol,
+            )
         return result
 
     return PendingBatchSolve(method=method, _finalize=finalize)
@@ -382,6 +480,8 @@ def solve_batch(
     x_ref: np.ndarray | None = None,
     tol: float = 1e-10,
     max_iter: int = 10000,
+    fallback: str = "cholesky",
+    fallback_residual_tol: float = FALLBACK_RESIDUAL_TOL,
     pattern: "engine.StampPattern | None" = None,
     mesh=None,
     device=None,
@@ -426,6 +526,16 @@ def solve_batch(
     design options — a performance passthrough for callers like the
     solve service that already built them, not a way to solve arbitrary
     netlists; use :func:`repro.core.engine.transient_batch` for that).
+
+    ``fallback`` is the numerical graceful-degradation policy for the
+    analog methods: a system whose analog solution comes back
+    non-finite — or uncertified (``settle_certified=False``) with a
+    relative residual above ``fallback_residual_tol`` — is re-solved
+    by the named digital baseline (``"cholesky"`` default, ``"cg"``,
+    or ``"none"`` to deliver the degraded analog result as-is), with
+    the per-system re-solve recorded in ``info["fallback"]``.  The
+    circuit diagnostics (``stable``, ``settle_time``, error model)
+    keep describing the analog attempt.
     """
     return solve_batch_submit(
         a,
@@ -445,6 +555,8 @@ def solve_batch(
         x_ref=x_ref,
         tol=tol,
         max_iter=max_iter,
+        fallback=fallback,
+        fallback_residual_tol=fallback_residual_tol,
         pattern=pattern,
         mesh=mesh,
         device=device,
@@ -471,6 +583,8 @@ def solve(
     x_ref: np.ndarray | None = None,
     tol: float = 1e-10,
     max_iter: int = 10000,
+    fallback: str = "cholesky",
+    fallback_residual_tol: float = FALLBACK_RESIDUAL_TOL,
 ) -> SolveResult:
     """Solve the SPD system ``A x = b``.
 
@@ -524,5 +638,9 @@ def solve(
         settle_dt_policy=settle_dt_policy,
         settle_matrix_free=settle_matrix_free,
         x_ref=None if x_ref is None else np.asarray(x_ref)[None, :],
+        tol=tol,
+        max_iter=max_iter,
+        fallback=fallback,
+        fallback_residual_tol=fallback_residual_tol,
     )
     return batch[0]

@@ -22,7 +22,9 @@ Parameter placement policy (see DESIGN.md §7):
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
+import time
 from typing import Mapping, Optional, Sequence
 
 import jax
@@ -187,6 +189,151 @@ def stream_devices(mesh=None, devices=None, n_devices: Optional[int] = None):
             )
         devs = devs[:n_devices]
     return devs
+
+
+@dataclasses.dataclass
+class _StreamState:
+    """Breaker state of one device stream."""
+
+    state: str = "closed"            # closed | open | half_open
+    consecutive_failures: int = 0
+    backoff_s: float = 0.0           # current open-interval length
+    open_until: float = 0.0          # monotonic time the backoff elapses
+
+
+class StreamBreaker:
+    """Per-device-stream circuit breaker for the solve service.
+
+    Each stream (an index into the service's round-robin device list)
+    is ``closed`` (serving), ``open`` (quarantined: consecutive
+    failures reached ``threshold``; no dispatches until its backoff
+    elapses) or ``half_open`` (one probe micro-batch in flight).  A
+    successful probe closes the stream and resets its backoff; a
+    failed probe re-opens it with the backoff doubled (capped at
+    ``backoff_max_s``) — exponential-backoff half-open probing, so a
+    flapping device costs a geometrically shrinking share of traffic
+    while a recovered one rejoins after a single probe.
+
+    The service owns the policy around the breaker: on a trip it
+    re-queues the quarantined stream's in-flight tickets (at original
+    admission rank, blameless — no retry budget consumed) onto the
+    healthy streams, and when *every* stream is open with work still
+    queued it calls :meth:`force_probe` so the service degrades to
+    probing instead of deadlocking.
+    """
+
+    def __init__(
+        self,
+        n_streams: int,
+        *,
+        threshold: int = 3,
+        backoff_s: float = 0.25,
+        backoff_max_s: float = 30.0,
+        clock=time.monotonic,
+    ):
+        if n_streams < 1:
+            raise ValueError("need at least one stream")
+        if threshold < 1:
+            raise ValueError("threshold must be >= 1")
+        self.threshold = int(threshold)
+        self.backoff_s = float(backoff_s)
+        self.backoff_max_s = float(backoff_max_s)
+        self.clock = clock
+        self._streams = [_StreamState() for _ in range(n_streams)]
+        self.trips = 0               # closed/half_open -> open transitions
+        self.probes = 0              # open -> half_open transitions
+        self.restores = 0            # half_open -> closed transitions
+
+    def __len__(self) -> int:
+        return len(self._streams)
+
+    def state(self, dev: int) -> str:
+        return self._streams[dev].state
+
+    def acquire(self, dev: int) -> bool:
+        """May stream ``dev`` take a dispatch right now?
+
+        ``closed`` streams always may.  An ``open`` stream whose
+        backoff has elapsed transitions to ``half_open`` and accepts
+        exactly this one dispatch as its probe; while the probe is in
+        flight further acquires are refused.
+        """
+        s = self._streams[dev]
+        if s.state == "closed":
+            return True
+        if s.state == "open" and self.clock() >= s.open_until:
+            s.state = "half_open"
+            self.probes += 1
+            return True
+        return False
+
+    def release(self, dev: int) -> None:
+        """Hand back an acquired probe slot without a device verdict.
+
+        Called when a dispatch acquired via :meth:`acquire` never
+        reached the device (the *host* build raised): the probe said
+        nothing about the stream's health, so a ``half_open`` stream
+        returns to ``open`` with its backoff already elapsed — the
+        next acquire probes again immediately.
+        """
+        s = self._streams[dev]
+        if s.state == "half_open":
+            s.state = "open"
+            s.open_until = self.clock()
+
+    def record_success(self, dev: int) -> None:
+        s = self._streams[dev]
+        if s.state == "half_open":
+            s.state = "closed"
+            self.restores += 1
+        s.consecutive_failures = 0
+        s.backoff_s = 0.0
+
+    def record_failure(self, dev: int) -> bool:
+        """Count one device-side failure; returns True when this call
+        trips the stream open (caller quarantines its in-flights)."""
+        s = self._streams[dev]
+        s.consecutive_failures += 1
+        if s.state == "half_open":
+            # failed probe: back off twice as long
+            s.state = "open"
+            s.backoff_s = min(
+                max(s.backoff_s, self.backoff_s) * 2.0, self.backoff_max_s
+            )
+            s.open_until = self.clock() + s.backoff_s
+            self.trips += 1
+            return True
+        if s.state == "closed" and s.consecutive_failures >= self.threshold:
+            s.state = "open"
+            s.backoff_s = self.backoff_s
+            s.open_until = self.clock() + s.backoff_s
+            self.trips += 1
+            return True
+        return False
+
+    def force_probe(self) -> int:
+        """Expire the soonest-recovering open stream's backoff now.
+
+        Called when every stream is quarantined but work remains: the
+        service must keep probing rather than deadlock — "degrade to
+        fewer streams", never to zero.  Returns the stream index.
+        """
+        open_streams = [
+            i for i, s in enumerate(self._streams) if s.state == "open"
+        ]
+        if not open_streams:
+            raise RuntimeError("force_probe with no open stream")
+        dev = min(open_streams, key=lambda i: self._streams[i].open_until)
+        self._streams[dev].open_until = self.clock()
+        return dev
+
+    def stats(self) -> dict:
+        return {
+            "states": [s.state for s in self._streams],
+            "trips": self.trips,
+            "probes": self.probes,
+            "restores": self.restores,
+        }
 
 
 def system_batch_sharding(mesh, ndim: int):

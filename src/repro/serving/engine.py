@@ -55,22 +55,31 @@ class AdmissionQueue:
     Items must carry ``priority`` / ``deadline`` / ``seq`` attributes
     (dataclass fields on :class:`Request` and the solve service's
     ``SolveTicket``); :meth:`push` stamps the arrival ``seq`` so FIFO
-    ties are stable.  :meth:`requeue` re-adds items *with their original
-    stamps* — the solve service's failed-drain contract re-queues every
-    undelivered ticket at its original admission rank, not at the back.
+    ties are stable.  ``priority`` / ``deadline`` passed to :meth:`push`
+    override the item's stamps; *omitted*, the item's own stamps are
+    preserved — a caller-constructed :class:`Request` with explicit
+    stamps is no longer silently reset to defaults on push.
+    :meth:`requeue` re-adds items *with their original stamps* (``seq``
+    included) — the solve service's re-queue contract puts every
+    undelivered ticket back at its original admission rank, not at the
+    back.
 
     Queues here are short-lived and small (they drain into slots every
     step), so pops scan for the minimum instead of maintaining a heap —
     that keeps arbitrary inspection/removal (:meth:`discard`) trivial.
     """
 
+    _UNSET = object()
+
     def __init__(self) -> None:
         self._items: list = []
         self._seq = 0
 
-    def push(self, item, *, priority: int = 0, deadline: float | None = None):
-        item.priority = priority
-        item.deadline = deadline
+    def push(self, item, *, priority=_UNSET, deadline=_UNSET):
+        if priority is not self._UNSET:
+            item.priority = priority
+        if deadline is not self._UNSET:
+            item.deadline = deadline
         item.seq = self._seq
         self._seq += 1
         self._items.append(item)
@@ -117,6 +126,9 @@ class Request:
     max_new: int = 32
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # structured failure (e.g. deadline_expired) instead of tokens;
+    # a request always finishes exactly one way: out or error
+    error: object | None = None
     # admission stamps (set by AdmissionQueue.push)
     priority: int = 0
     deadline: float | None = None
@@ -134,6 +146,7 @@ class ServeEngine:
         sampler: str = "greedy",
         temperature: float = 1.0,
         seed: int = 0,
+        fault_injector=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -142,6 +155,14 @@ class ServeEngine:
         self.sampler = sampler
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
+        # the same chaos hook the solve service takes
+        # (repro.serving.faults.FaultInjector); an injected device
+        # fault turns the step into a no-op retry, an injected slow
+        # fault stalls it — both are what deadline enforcement and the
+        # caller's retry loop must survive
+        self.fault_injector = fault_injector
+        self.faulted_steps = 0
+        self.expired = 0
 
         self._decode = jax.jit(
             lambda p, t, pos, c: decode_step(p, t, pos, c, cfg))
@@ -153,14 +174,26 @@ class ServeEngine:
         self.queue = AdmissionQueue()
 
     # ----------------------------------------------------------- scheduling
-    def submit(self, req: Request, *, priority: int = 0,
-               deadline: float | None = None):
+    def submit(self, req: Request, *, priority=AdmissionQueue._UNSET,
+               deadline=AdmissionQueue._UNSET):
         self.queue.push(req, priority=priority, deadline=deadline)
 
     def _admit(self):
+        import time as _time
+
         for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
+            while self.active[slot] is None and self.queue:
                 req = self.queue.pop()
+                # deadline enforcement at pop time: an expired request
+                # is rejected with a structured error, never prefilled
+                # (deadlines are absolute time.monotonic() stamps)
+                if req.deadline is not None and _time.monotonic() >= req.deadline:
+                    from repro.serving.faults import SolveError
+
+                    req.done = True
+                    req.error = SolveError(kind="deadline_expired")
+                    self.expired += 1
+                    continue
                 self._prefill_slot(slot, req)
 
     def _prefill_slot(self, slot: int, req: Request):
@@ -188,10 +221,26 @@ class ServeEngine:
 
     # ----------------------------------------------------------- decoding
     def step(self):
-        """One decode step across every active slot."""
+        """One decode step across every active slot.
+
+        Under an armed fault injector a ``device_fault`` draw turns
+        this step into a counted no-op (slot state untouched — the
+        next step retries the same decode), and a ``slow`` draw stalls
+        it; ``run()`` therefore keeps its bounded ``max_steps`` budget
+        as the retry budget.
+        """
         self._admit()
         if not any(r is not None for r in self.active):
             return
+        if self.fault_injector is not None:
+            kind = self.fault_injector.draw()
+            if kind in ("device_fault", "build_error", "nonfinite"):
+                self.faulted_steps += 1
+                return
+            if kind == "slow":
+                import time as _time
+
+                _time.sleep(self.fault_injector.plan.slow_s)
         toks = np.zeros((self.slots, 1), dtype=np.int32)
         for s, req in enumerate(self.active):
             if req is not None and req.out:

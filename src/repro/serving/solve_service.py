@@ -67,6 +67,65 @@ and keeps every device busy while the host builds the next one:
   ``analog_n`` it stops climbing once the cached union covers the
   stream's slot population.
 
+Failure semantics — the delivery contract
+-----------------------------------------
+
+Every submitted ticket yields **exactly one** terminal answer from
+``drain()`` — a :class:`~repro.core.solver.SolveResult` or a structured
+:class:`~repro.serving.faults.SolveError` — **in bounded time, under
+any single-fault model**.  The machinery behind that contract:
+
+* **error taxonomy** — failures are *returned in the ticket's result
+  slot*, never raised: ``SolveError(kind, attempts, detail)`` with
+  ``kind`` one of ``device_fault`` (the stream's solve raised),
+  ``nonfinite`` (the delivered solution carried NaN/Inf),
+  ``uncertified`` (settling never certified and the residual
+  overflowed, with digital fallback disabled), ``deadline_expired``,
+  ``poison`` (the request's own host build raises repeatedly), and
+  ``shed`` (queue-depth load shedding).
+* **bounded retry + poison bisection** — a failing micro-batch of more
+  than one ticket is *bisected*: both halves re-dispatch, so a single
+  poison request is isolated in ``log2(batch_slots)`` extra dispatches
+  while its batch-mates still solve.  A failing singleton charges that
+  ticket's retry budget; after ``max_attempts`` the ticket is
+  failed-fast with a ``SolveError`` and **never re-queued** — the v1
+  behavior of re-queueing *every* ticket whenever a micro-batch raised
+  livelocked ``drain()`` on any persistent fault.
+* **deadline enforcement & shedding** — ``deadline`` is an absolute
+  :func:`time.monotonic` stamp (see :meth:`SolveService.now`): besides
+  ordering admission it is now *enforced* — an expired ticket is
+  rejected at pop time with ``deadline_expired``, never dispatched.
+  With ``max_queue_depth`` set, a drain over depth sheds the
+  lowest-admission-rank (lowest-priority) excess with ``shed``.
+* **stream quarantine** — a per-device-stream circuit breaker
+  (:class:`repro.distributed.sharding.StreamBreaker`):
+  ``breaker_threshold`` consecutive device-side failures trip a stream
+  open; its in-flight tickets re-queue at original admission rank onto
+  the healthy streams (blameless — no retry budget consumed), and
+  exponential-backoff half-open probes restore it.  The service
+  degrades to fewer streams; with *every* stream quarantined it keeps
+  force-probing the soonest-recovering one rather than deadlocking.
+* **analog→digital fallback** — a non-finite analog solution (or an
+  uncertified one whose residual overflows) re-solves digitally inside
+  :func:`repro.core.solver.solve_batch` (``fallback="cholesky"``
+  default), recorded per system as ``info["fallback"]`` and counted in
+  ``stats["fallbacks"]``.
+* **fault injection** — the chaos hook: pass a seeded
+  :class:`~repro.serving.faults.FaultInjector` as ``fault_injector``
+  and the service injects device faults, NaN solutions, host build
+  errors and slow solves *at the exact points real ones surface*;
+  ``stats["fault_injections"]`` counts them.  ``tests/test_faults.py``
+  and ``benchmarks/solve_service.py --faults`` share this mechanism.
+
+``stats`` surfaces the whole story: ``retries``, ``bisections``,
+``shed``, ``deadline_expired``, ``quarantines``, ``fallbacks``,
+``fault_injections``, per-kind terminal ``errors`` and the breaker
+state.  If ``drain()`` is interrupted by an *unexpected* exception
+(a bug, ``KeyboardInterrupt``), every popped ticket — terminal answers
+included — is re-queued at original admission rank; already-computed
+answers re-deliver from the ticket's result slot on the next drain
+without recomputation.
+
 Single-host caveats (see ROADMAP): netlist building and result
 unpacking stay host-side (they are the overlap *budget*, not dead
 time); the settle sweep's Pallas kernels run on the stream's device
@@ -76,6 +135,7 @@ settling requests bucket at exact ``n``.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any
@@ -87,6 +147,8 @@ from repro.core.operating_point import NonIdealities
 from repro.core.solver import (
     ANALOG_METHODS,
     DIGITAL_METHODS,
+    FALLBACK_METHODS,
+    FALLBACK_RESIDUAL_TOL,
     PendingBatchSolve,
     SolveResult,
     _build_nets,
@@ -94,6 +156,12 @@ from repro.core.solver import (
 )
 from repro.core.specs import DEFAULT_PARAMS, OPAMPS, CircuitParams, OpAmpSpec
 from repro.serving.engine import AdmissionQueue
+from repro.serving.faults import (
+    ERROR_KINDS,
+    FaultInjected,
+    FaultInjector,
+    SolveError,
+)
 
 # nominal voltage of padded unknowns; in-range for the paper's
 # x ~ U[-0.5, 0.5] V protocol, nonzero so pad nodes keep a supply leg
@@ -158,13 +226,17 @@ class SolveSignature:
 
 @dataclasses.dataclass
 class SolveTicket:
-    """One queued request; ``result`` is filled by :meth:`SolveService.drain`."""
+    """One queued request; ``result`` is filled by :meth:`SolveService.drain`
+    with the solution — or a structured :class:`SolveError`, never
+    nothing: exactly-once delivery is the service contract."""
 
     rid: int
     a: np.ndarray
     b: np.ndarray
     sig: SolveSignature
-    result: SolveResult | None = None
+    result: SolveResult | SolveError | None = None
+    # failed dispatch/harvest count (bounded by max_attempts)
+    attempts: int = 0
     # admission stamps (set by AdmissionQueue.push)
     priority: int = 0
     deadline: float | None = None
@@ -258,6 +330,31 @@ class SolveService:
     pad_sizes:
         The bucketing grid for ``n``; off-grid sizes round up to the
         next multiple of ``PAD_QUANTUM``.
+    max_attempts:
+        Retry budget per ticket: failed dispatches/harvests a single
+        ticket may see before it is failed-fast with a
+        :class:`SolveError` (never re-queued) — the bound that keeps
+        ``drain()`` terminating under any persistent fault.
+    max_queue_depth:
+        Optional load shedding: a drain admitting more than this many
+        tickets sheds the lowest-admission-rank excess with
+        ``SolveError(kind="shed")``.
+    fallback / fallback_residual_tol:
+        The analog→digital graceful-degradation policy forwarded to
+        :func:`repro.core.solver.solve_batch_submit` (``"cholesky"``
+        default, ``"cg"``, ``"none"``).  With ``"none"``, a
+        non-finite result retries (it may be transient) and an
+        uncertified-with-residual-overflow one fails fast as
+        ``uncertified`` (it is deterministic — retrying cannot help).
+    breaker_threshold / breaker_backoff_s / breaker_backoff_max_s:
+        The per-stream circuit breaker: consecutive device-side
+        failures before a stream is quarantined, and its
+        exponential-backoff half-open probe schedule
+        (:class:`repro.distributed.sharding.StreamBreaker`).
+    fault_injector:
+        Optional seeded :class:`repro.serving.faults.FaultInjector` —
+        the chaos hook shared by the fault test suite and the
+        degraded-mode benchmark.
     """
 
     def __init__(
@@ -270,26 +367,76 @@ class SolveService:
         inflight_per_device: int = 2,
         pad_sizes: tuple[int, ...] = DEFAULT_PAD_SIZES,
         params: CircuitParams = DEFAULT_PARAMS,
+        max_attempts: int = 3,
+        max_queue_depth: int | None = None,
+        fallback: str = "cholesky",
+        fallback_residual_tol: float = FALLBACK_RESIDUAL_TOL,
+        breaker_threshold: int = 3,
+        breaker_backoff_s: float = 0.25,
+        breaker_backoff_max_s: float = 30.0,
+        fault_injector: FaultInjector | None = None,
     ):
-        from repro.distributed.sharding import stream_devices
+        from repro.distributed.sharding import StreamBreaker, stream_devices
 
         self.devices = stream_devices(
             mesh=mesh, devices=devices, n_devices=n_devices
         )
         if inflight_per_device < 1:
             raise ValueError("inflight_per_device must be >= 1")
+        if max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if fallback is None:
+            fallback = "none"
+        if fallback not in FALLBACK_METHODS:
+            raise ValueError(
+                f"unknown fallback {fallback!r}: expected one of "
+                f"{FALLBACK_METHODS}"
+            )
         self.inflight_per_device = int(inflight_per_device)
         self.batch_slots = max(1, int(batch_slots))
         self.pad_sizes = tuple(sorted(pad_sizes))
         self.params = params
+        self.max_attempts = int(max_attempts)
+        self.max_queue_depth = (
+            None if max_queue_depth is None else int(max_queue_depth)
+        )
+        self.fallback = fallback
+        self.fallback_residual_tol = float(fallback_residual_tol)
+        self.fault_injector = fault_injector
+        self.breaker = StreamBreaker(
+            len(self.devices),
+            threshold=breaker_threshold,
+            backoff_s=breaker_backoff_s,
+            backoff_max_s=breaker_backoff_max_s,
+        )
         self.queue = AdmissionQueue()
         self._pipelines: dict[tuple, _BucketPipeline] = {}
         self._next_rid = 0
+        self._rr = 0             # round-robin stream cursor
         self._wall_s = 0.0
         self._host_build_s = 0.0
         self._device_wait_s = 0.0
         self._unpack_s = 0.0
         self._real_sq = 0.0      # sum n^2 over served systems (stats)
+        self._counters: dict[str, Any] = {
+            "retries": 0,
+            "bisections": 0,
+            "shed": 0,
+            "deadline_expired": 0,
+            "fallbacks": 0,
+            "quarantines": 0,
+            "requeued_on_quarantine": 0,
+            "errors": {k: 0 for k in ERROR_KINDS},
+        }
+
+    @staticmethod
+    def now() -> float:
+        """The service's deadline clock (:func:`time.monotonic`).
+
+        Deadlines are absolute stamps on this clock:
+        ``submit(..., deadline=SolveService.now() + budget_s)``.
+        """
+        return time.monotonic()
 
     # ------------------------------------------------------------ intake
     def pad_to(self, n: int) -> int:
@@ -424,45 +571,63 @@ class SolveService:
         """Host phase of one micro-batch + async dispatch to stream ``dev``.
 
         Returns without blocking on the device — the scheduler builds
-        the next micro-batch while this one's solve runs.
+        the next micro-batch while this one's solve runs.  An armed
+        fault injector draws once per dispatch here: ``build_error``
+        raises out of the host phase, the other kinds are planted into
+        the returned handle so they surface at harvest exactly where
+        real ones would.
         """
         t_build = time.perf_counter()
-        sig = pipe.sig
-        n_real = len(tickets)
-        fill = self.batch_slots - n_real
-        rhs = "zero" if sig.method in DIGITAL_METHODS else "supply"
-        padded = [pad_system(t.a, t.b, pipe.n_pad, rhs=rhs) for t in tickets]
-        padded += [padded[-1]] * fill          # repeat-fill to fixed shape
-        a_stack = np.stack([p[0] for p in padded])
-        b_stack = np.stack([p[1] for p in padded])
-
-        pattern, nets = self._bucket_pattern(pipe, a_stack, b_stack)
-        pending = solve_batch_submit(
-            a_stack,
-            b_stack,
-            method=sig.method,
-            opamp=sig.opamp,
-            nonideal=sig.nonideal,
-            nets=nets,
-            d_policy=sig.d_policy,
-            beta=sig.beta,
-            alpha=sig.alpha,
-            compute_settling=sig.compute_settling,
-            settle_method=sig.settle_method,
-            settle_max_steps=sig.settle_max_steps,
-            settle_dt_policy=sig.settle_dt_policy,
-            tol=sig.tol,
-            max_iter=sig.max_iter,
-            pattern=pattern,
-            device=self.devices[dev],
+        fault = (
+            None if self.fault_injector is None
+            else self.fault_injector.draw(dev=dev)
         )
+        try:
+            if fault is not None:
+                self.fault_injector.build_fault(fault)   # raises build_error
+            sig = pipe.sig
+            n_real = len(tickets)
+            fill = self.batch_slots - n_real
+            rhs = "zero" if sig.method in DIGITAL_METHODS else "supply"
+            padded = [pad_system(t.a, t.b, pipe.n_pad, rhs=rhs) for t in tickets]
+            padded += [padded[-1]] * fill          # repeat-fill to fixed shape
+            a_stack = np.stack([p[0] for p in padded])
+            b_stack = np.stack([p[1] for p in padded])
+
+            pattern, nets = self._bucket_pattern(pipe, a_stack, b_stack)
+            pending = solve_batch_submit(
+                a_stack,
+                b_stack,
+                method=sig.method,
+                opamp=sig.opamp,
+                nonideal=sig.nonideal,
+                nets=nets,
+                d_policy=sig.d_policy,
+                beta=sig.beta,
+                alpha=sig.alpha,
+                compute_settling=sig.compute_settling,
+                settle_method=sig.settle_method,
+                settle_max_steps=sig.settle_max_steps,
+                settle_dt_policy=sig.settle_dt_policy,
+                tol=sig.tol,
+                max_iter=sig.max_iter,
+                fallback=self.fallback,
+                fallback_residual_tol=self.fallback_residual_tol,
+                pattern=pattern,
+                device=self.devices[dev],
+            )
+        finally:
+            self._host_build_s += time.perf_counter() - t_build
+        if fault is not None:
+            pending = self.fault_injector.arm(pending, fault)
         pipe.micro_batches += 1
         pipe.systems += n_real
         pipe.fill_slots += fill
-        self._host_build_s += time.perf_counter() - t_build
         return _InFlight(pipe=pipe, tickets=tickets, pending=pending, dev=dev)
 
-    def _unpack_micro_batch(self, pipe, tickets, batch) -> None:
+    def _unpack_micro_batch(
+        self, pipe, tickets, batch
+    ) -> list[tuple[SolveTicket, str, str]]:
         """Materialize per-ticket results from one harvested micro-batch.
 
         Vectorized: one batched slice (+ ``tolist`` bulk conversion)
@@ -472,6 +637,15 @@ class SolveService:
         per key.  ``x`` rows are handed out as views into the single
         micro-batch array, trimmed to each ticket's real ``n`` (the pad
         solution is masked out).
+
+        Delivery acceptance runs here: a ticket whose trimmed solution
+        carries NaN/Inf is NOT delivered — it is returned as a
+        ``("nonfinite", ...)`` failure for the retry machinery (the
+        corruption may be transient).  An uncertified settling result
+        whose residual overflows with digital fallback disabled is
+        returned as ``("uncertified", ...)`` — deterministic, so the
+        caller fails it fast.  Everything else is delivered, with
+        per-system digital fallbacks counted.
         """
         n_real = len(tickets)
         xs = np.asarray(batch.x)
@@ -489,98 +663,273 @@ class SolveService:
                 # scalar shared by the batch; normalize numpy scalars
                 # exactly as BatchSolveResult.__getitem__ would
                 shared[key] = batch._info_entry(v, 0)
+        bad: list[tuple[SolveTicket, str, str]] = []
         for i, ticket in enumerate(tickets):
             info = {
                 k: (cols[k][i] if k in cols else shared[k])
                 for k in batch.info
             }
+            x = xs[i, : ticket.n]
+            if not np.isfinite(x).all():
+                bad.append((ticket, "nonfinite", "solution carried NaN/Inf"))
+                continue
+            if info.get("settle_certified") is False:
+                r = ticket.a @ x - ticket.b
+                rel = float(
+                    np.linalg.norm(r)
+                    / max(np.linalg.norm(ticket.b), np.finfo(np.float64).tiny)
+                )
+                if rel > self.fallback_residual_tol and not info.get("fallback"):
+                    bad.append((
+                        ticket, "uncertified",
+                        f"settle uncertified, rel residual {rel:.3e}",
+                    ))
+                    continue
+            if info.get("fallback"):
+                self._counters["fallbacks"] += 1
             info["service_n_padded"] = pipe.n_pad
             info["service_batch_slots"] = self.batch_slots
             ticket.result = SolveResult(
-                x=xs[i, : ticket.n],
+                x=x,
                 method=batch.method,
                 stable=bool(stable[i]),
                 settle_time=None if settle is None else float(settle[i]),
                 info=info,
             )
             self._real_sq += float(ticket.n) ** 2
+        return bad
+
+    # ------------------------------------------------- failure machinery
+    def _fail(self, ticket: SolveTicket, kind: str, detail: str, out) -> None:
+        """Terminal: deliver a structured error in the result slot."""
+        err = SolveError(kind=kind, attempts=ticket.attempts, detail=detail)
+        ticket.result = err
+        out[ticket.rid] = err
+        self._counters["errors"][kind] += 1
+
+    def _admit_ticket(self, ticket: SolveTicket, out) -> bool:
+        """Pop-time gate: re-deliver already-terminal tickets, reject
+        expired deadlines (never dispatched).  True = dispatchable."""
+        if ticket.result is not None:
+            # answered in an interrupted drain: re-deliver, don't redo
+            out[ticket.rid] = ticket.result
+            return False
+        if ticket.deadline is not None and self.now() >= ticket.deadline:
+            self._counters["deadline_expired"] += 1
+            self._fail(ticket, "deadline_expired",
+                       "deadline passed before dispatch", out)
+            return False
+        return True
+
+    def _group_failed(
+        self, pipe, group, exc: Exception, *, device_side: bool, work, out
+    ) -> None:
+        """One micro-batch raised: bisect groups, charge singletons.
+
+        A group of more than one ticket carries no per-ticket blame —
+        it splits in half and both halves re-dispatch (front of the
+        work queue, so retries keep their early admission rank).  A
+        singleton failure is evidence against that ticket: its retry
+        budget is charged, and at ``max_attempts`` it fails fast with
+        ``device_fault`` (the stream's solve raised) or ``poison``
+        (its own host build raised) — never re-queued again.
+        """
+        if len(group) > 1:
+            self._counters["bisections"] += 1
+            mid = (len(group) + 1) // 2
+            work.appendleft((pipe, group[mid:]))
+            work.appendleft((pipe, group[:mid]))
+            return
+        ticket = group[0]
+        ticket.attempts += 1
+        kind = "device_fault" if device_side else "poison"
+        if ticket.attempts >= self.max_attempts:
+            detail = f"{type(exc).__name__}: {exc}"
+            self._fail(ticket, kind, detail[:200], out)
+        else:
+            self._counters["retries"] += 1
+            work.appendleft((pipe, [ticket]))
+
+    def _quarantine(self, dev: int, inflight, per_dev, work) -> None:
+        """A stream tripped open: pull its in-flight micro-batches and
+        re-queue their tickets (blameless — no retry budget consumed)
+        onto the healthy streams, at the front of the work queue."""
+        self._counters["quarantines"] += 1
+        stuck = [f for f in inflight if f.dev == dev]
+        for flight in reversed(stuck):
+            inflight.remove(flight)
+            per_dev[dev] -= 1
+            self._counters["requeued_on_quarantine"] += len(flight.tickets)
+            work.appendleft((flight.pipe, flight.tickets))
+
+    def _next_stream(self, per_dev) -> int | None:
+        """Round-robin over streams with a free in-flight slot that the
+        circuit breaker admits (closed, or due for a half-open probe)."""
+        n_dev = len(self.devices)
+        for k in range(n_dev):
+            dev = (self._rr + k) % n_dev
+            if (
+                per_dev[dev] < self.inflight_per_device
+                and self.breaker.acquire(dev)
+            ):
+                self._rr = (dev + 1) % n_dev
+                return dev
+        return None
 
     def _harvest(
-        self, flight: _InFlight, out: dict[int, SolveResult],
-        per_dev: list[int],
+        self, flight: _InFlight, out, per_dev, work, inflight
     ) -> None:
-        """Block on one in-flight micro-batch and deliver its results."""
+        """Block on one in-flight micro-batch and deliver its results.
+
+        A device-side exception feeds the stream's circuit breaker
+        (tripping it quarantines the stream and re-queues its other
+        in-flights) and the group failure machinery; a clean harvest
+        resets the breaker and runs delivery acceptance (non-finite /
+        uncertified tickets re-enter the retry loop individually).
+        """
         t_wait = time.perf_counter()
-        batch = flight.pending.wait()
+        try:
+            batch = flight.pending.wait()
+        except Exception as exc:
+            self._device_wait_s += time.perf_counter() - t_wait
+            per_dev[flight.dev] -= 1
+            tripped = self.breaker.record_failure(flight.dev)
+            self._group_failed(
+                flight.pipe, flight.tickets, exc,
+                device_side=True, work=work, out=out,
+            )
+            if tripped:
+                self._quarantine(flight.dev, inflight, per_dev, work)
+            return
         self._device_wait_s += time.perf_counter() - t_wait
+        per_dev[flight.dev] -= 1
+        self.breaker.record_success(flight.dev)
         t_unpack = time.perf_counter()
-        self._unpack_micro_batch(flight.pipe, flight.tickets, batch)
+        bad = self._unpack_micro_batch(flight.pipe, flight.tickets, batch)
         self._unpack_s += time.perf_counter() - t_unpack
         for t in flight.tickets:
-            out[t.rid] = t.result
-        per_dev[flight.dev] -= 1
+            if t.result is not None:
+                out[t.rid] = t.result
+        retry: list[SolveTicket] = []
+        for ticket, kind, detail in bad:
+            ticket.attempts += 1
+            if kind == "uncertified" or ticket.attempts >= self.max_attempts:
+                # uncertified is deterministic — retrying cannot help
+                self._fail(ticket, kind, detail, out)
+            else:
+                self._counters["retries"] += 1
+                retry.append(ticket)
+        if retry:
+            work.appendleft((flight.pipe, retry))
 
-    def drain(self) -> dict[int, SolveResult]:
-        """Solve everything queued; returns ``{rid: SolveResult}``.
+    def drain(self) -> dict[int, SolveResult | SolveError]:
+        """Answer everything queued; returns ``{rid: result-or-error}``.
 
         Tickets leave the queue in admission order
-        (priority/deadline/FIFO) and group into buckets; each bucket's
-        micro-batches are assigned to the device streams round-robin.
-        A stream holding ``inflight_per_device`` dispatched
-        micro-batches back-pressures the scheduler: its oldest
-        micro-batch is harvested (device wait + vectorized unpack)
-        before the next host build starts — with 2 in-flight slots the
-        host build of micro-batch ``i+1`` overlaps the device solve of
-        ``i`` on every stream.  Results are handed to the caller and
-        not retained by the service (a long-running stream must not
-        accumulate solved systems).  If any micro-batch raises (e.g. a
-        system violating the transform's guarantee), the caller
-        receives nothing, so EVERY ticket of this drain — including
-        already-harvested ones, which just recompute — is re-queued at
-        its original admission rank instead of being silently
-        discarded.
+        (priority/deadline/FIFO) — shedding the over-depth excess and
+        rejecting expired deadlines — and group into buckets; each
+        bucket's micro-batches are assigned to breaker-admitted device
+        streams round-robin.  A stream holding ``inflight_per_device``
+        dispatched micro-batches back-pressures the scheduler: the
+        globally-oldest micro-batch is harvested (device wait +
+        vectorized unpack) before the next host build starts — with 2
+        in-flight slots the host build of micro-batch ``i+1`` overlaps
+        the device solve of ``i`` on every stream.  Failures never
+        raise out of here: they bisect, retry within each ticket's
+        ``max_attempts`` budget, and land as :class:`SolveError`
+        results (see the module docstring's failure-semantics
+        section), so every admitted ticket is answered exactly once
+        and the drain terminates under any persistent fault.  Results
+        are handed to the caller and not retained by the service (a
+        long-running stream must not accumulate solved systems).
+
+        Only an *unexpected* exception (a scheduler bug,
+        ``KeyboardInterrupt``) still propagates; then every popped
+        ticket is re-queued at its original admission rank — already
+        answered ones re-deliver from their result slot next drain.
         """
         t0 = time.perf_counter()
-        queued = self.queue.pop_all()
-        if not queued:
+        popped = self.queue.pop_all()
+        if not popped:
             return {}
+        out: dict[int, SolveResult | SolveError] = {}
+
+        queued = popped
+        if (
+            self.max_queue_depth is not None
+            and len(queued) > self.max_queue_depth
+        ):
+            # load shedding: lowest admission rank (lowest priority /
+            # latest deadline / newest) drops first
+            queued, shed = (
+                queued[: self.max_queue_depth],
+                queued[self.max_queue_depth:],
+            )
+            self._counters["shed"] += len(shed)
+            for ticket in shed:
+                self._fail(ticket, "shed",
+                           f"queue depth over {self.max_queue_depth}", out)
+
         buckets: dict[tuple, list[SolveTicket]] = {}
         for ticket in queued:
             buckets.setdefault(self._bucket_key(ticket), []).append(ticket)
 
-        # fixed-shape micro-batches, bucket-major in admission order of
-        # each bucket's head request
-        micro: list[tuple[_BucketPipeline, list[SolveTicket]]] = []
+        # fixed-shape micro-batch groups, bucket-major in admission
+        # order of each bucket's head request; retries/bisections
+        # re-enter at the FRONT so old work finishes first
+        work: collections.deque = collections.deque()
         for key, tickets in buckets.items():
             n_pad, sig = key
             pipe = self._pipelines.setdefault(
                 key, _BucketPipeline(n_pad=n_pad, sig=sig)
             )
             for start in range(0, len(tickets), self.batch_slots):
-                micro.append((pipe, tickets[start:start + self.batch_slots]))
+                work.append((pipe, tickets[start:start + self.batch_slots]))
 
-        out: dict[int, SolveResult] = {}
-        n_dev = len(self.devices)
         inflight: list[_InFlight] = []          # dispatch-FIFO harvest order
-        per_dev = [0] * n_dev
+        per_dev = [0] * len(self.devices)
+        # deterministic placement per drain: identical request streams
+        # hit identical (bucket, device) pairs every drain, so a warmed
+        # service never recompiles (jit executables are per device)
+        self._rr = 0
         try:
-            for i, (pipe, chunk) in enumerate(micro):
-                dev = i % n_dev
-                # back-pressure: free a slot on this stream by
-                # harvesting globally-oldest flights (round-robin
-                # dispatch makes the oldest flight this stream's)
-                while per_dev[dev] >= self.inflight_per_device:
-                    self._harvest(inflight.pop(0), out, per_dev)
-                inflight.append(self._dispatch_micro_batch(pipe, chunk, dev))
-                per_dev[dev] += 1
-            while inflight:
-                self._harvest(inflight.pop(0), out, per_dev)
+            while work or inflight:
+                if work:
+                    pipe, group = work.popleft()
+                    group = [t for t in group if self._admit_ticket(t, out)]
+                    if not group:
+                        continue
+                    dev = self._next_stream(per_dev)
+                    if dev is not None:
+                        try:
+                            flight = self._dispatch_micro_batch(
+                                pipe, group, dev
+                            )
+                        except Exception as exc:
+                            # host build failure: no device verdict —
+                            # hand back a consumed probe slot unjudged
+                            self.breaker.release(dev)
+                            self._group_failed(
+                                pipe, group, exc,
+                                device_side=False, work=work, out=out,
+                            )
+                        else:
+                            inflight.append(flight)
+                            per_dev[dev] += 1
+                        continue
+                    work.appendleft((pipe, group))
+                if inflight:
+                    self._harvest(inflight.pop(0), out, per_dev, work, inflight)
+                elif work:
+                    # every stream quarantined with backoff pending:
+                    # degrade to probing, never to a deadlock
+                    self.breaker.force_probe()
         except BaseException:
-            # the caller receives nothing from a raising drain, so put
-            # EVERY ticket of this drain back at its original admission
-            # rank (already-served ones just recompute next time) —
-            # nothing is silently discarded
-            self.queue.requeue(queued)
+            # unexpected interruption: the caller receives nothing, so
+            # put EVERY popped ticket back at its original admission
+            # rank — answered ones re-deliver from their result slot
+            # next drain, nothing is silently discarded
+            self.queue.requeue(popped)
             self._wall_s += time.perf_counter() - t0
             raise
         self._wall_s += time.perf_counter() - t0
@@ -602,6 +951,14 @@ class SolveService:
         could not hide.  ``pattern_derivations`` counts
         ``pattern_union`` calls per bucket (1 proves the cache served
         every later micro-batch on every stream).
+
+        The fault-tolerance story rides along: ``retries`` /
+        ``bisections`` (non-terminal recovery work), ``shed`` /
+        ``deadline_expired`` (admission-time rejections),
+        ``quarantines`` / ``requeued_on_quarantine`` + the ``breaker``
+        snapshot (stream health), ``fallbacks`` (per-system
+        analog→digital re-solves), terminal ``errors`` per kind, and
+        ``fault_injections`` when a chaos injector is armed.
         """
         per_bucket = {}
         pad_sq = 0.0
@@ -623,6 +980,7 @@ class SolveService:
             fills += pipe.fill_slots
             pad_sq += (pipe.systems + pipe.fill_slots) * float(n_pad) ** 2
         real_sq = self._real_sq
+        c = self._counters
         return {
             "requests": total,
             "fill_slots": fills,
@@ -635,4 +993,17 @@ class SolveService:
             "devices": len(self.devices),
             "inflight_per_device": self.inflight_per_device,
             "batch_slots": self.batch_slots,
+            "retries": c["retries"],
+            "bisections": c["bisections"],
+            "shed": c["shed"],
+            "deadline_expired": c["deadline_expired"],
+            "fallbacks": c["fallbacks"],
+            "quarantines": c["quarantines"],
+            "requeued_on_quarantine": c["requeued_on_quarantine"],
+            "errors": dict(c["errors"]),
+            "fault_injections": (
+                0 if self.fault_injector is None
+                else self.fault_injector.stats()["total_injected"]
+            ),
+            "breaker": self.breaker.stats(),
         }

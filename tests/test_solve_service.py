@@ -18,6 +18,7 @@ from repro.core.network import (
 )
 from repro.core.solver import solve, solve_batch
 from repro.data.spd import random_rhs_from_solution, random_sdd, random_spd
+from repro.serving.faults import SolveError
 from repro.serving.solve_service import (
     DEFAULT_PAD_SIZES,
     PAD_QUANTUM,
@@ -372,44 +373,89 @@ def test_service_iterative_tol_honored_under_padding():
     np.testing.assert_allclose(res.x, x, rtol=1e-5, atol=1e-12)
 
 
-def test_service_drain_requeues_on_failure_and_retains_no_results():
-    """A failing micro-batch must not discard other queued requests,
-    and served results are handed off, not retained by the service."""
+def test_service_poison_fails_fast_and_batch_mates_still_solve():
+    """Regression for the v1 livelock: a persistently-failing request
+    used to re-queue the WHOLE drain forever.  Now the poison bisects
+    out of its micro-batch, burns its own retry budget, and lands as a
+    structured SolveError — while its batch-mates deliver solutions."""
+    import repro.serving.solve_service as ss
+
     rng = np.random.default_rng(15)
     a, x, b = _sys(rng, 6)
-    svc = SolveService(batch_slots=2)
+    svc = SolveService(batch_slots=2, max_attempts=3)
     good = svc.submit(a, b, method="cholesky")
     bad_a = a.copy()
-    bad_a[0, 0] = np.nan                       # poisons the analog build
-    svc.submit(bad_a, b, method="analog_2n")
+    bad_a[0, 0] = np.nan                       # marks the poison request
+    bad = svc.submit(bad_a, b, method="analog_2n")
     good2 = svc.submit(a, b, method="analog_2n")
-    with pytest.raises(Exception):
-        svc.drain()
-    # a raising drain returns nothing, so EVERY ticket is back in the
-    # queue — nothing silently dropped, nothing half-delivered
-    assert {t.rid for t in svc.queue} >= {good, good2}
-    assert not hasattr(svc, "results")          # no unbounded retention
 
-    # the service still answers after the caller removes the poison
-    dropped = svc.queue.discard(lambda t: np.isnan(t.a).any())
-    assert len(dropped) == 1
-    res = svc.drain()
+    # the poison's own host build deterministically raises (tied to
+    # the request's data, so it follows the ticket through bisection)
+    orig = ss.solve_batch_submit
+
+    def building(a_stack, b_stack, **kw):
+        if np.isnan(a_stack).any():
+            raise RuntimeError("netlist build failed")
+        return orig(a_stack, b_stack, **kw)
+
+    ss.solve_batch_submit = building
+    try:
+        res = svc.drain()                      # terminates — no livelock
+    finally:
+        ss.solve_batch_submit = orig
+    # exactly-once delivery: every ticket answered, queue empty
+    assert set(res) == {good, bad, good2}
+    assert len(svc.queue) == 0
+    err = res[bad]
+    assert isinstance(err, SolveError)
+    assert err.kind == "poison"
+    assert err.attempts == 3                   # full budget consumed
+    assert svc.stats["errors"]["poison"] == 1
+    assert svc.stats["bisections"] >= 1        # isolated from good2
     for rid in (good, good2):
         np.testing.assert_allclose(res[rid].x, np.linalg.solve(a, b),
                                    rtol=1e-6, atol=1e-9)
+    assert not hasattr(svc, "results")          # no unbounded retention
+
+    # the service is healthy afterwards
+    again = svc.submit(a, b, method="analog_2n")
+    np.testing.assert_allclose(svc.drain()[again].x, np.linalg.solve(a, b),
+                               rtol=1e-6, atol=1e-9)
+
+
+def test_service_nan_system_lands_as_bounded_nonfinite_error():
+    """A NaN-carrying system flows through the whole pipeline (the DC
+    singular-repair path included — regression: it crashed on JAX's
+    read-only buffers) and lands as a bounded structured nonfinite
+    error, not a raise and not a livelock."""
+    rng = np.random.default_rng(15)
+    a, x, b = _sys(rng, 6)
+    bad_a = a.copy()
+    bad_a[0, 0] = np.nan
+    svc = SolveService(batch_slots=1, max_attempts=2)
+    rid = svc.submit(bad_a, b, method="analog_2n")
+    res = svc.drain()
+    err = res[rid]
+    assert isinstance(err, SolveError)
+    assert err.kind == "nonfinite"
+    assert err.attempts == 2
+    assert len(svc.queue) == 0
 
 
 def test_service_priority_deadline_admission_order():
     """Under a saturated bucket the queue admits by priority first,
     earliest-deadline within a class, FIFO last — observed as the
-    micro-batch dispatch order."""
+    micro-batch dispatch order.  (Deadlines are absolute monotonic
+    stamps and are enforced, so the test uses comfortable offsets from
+    SolveService.now().)"""
     rng = np.random.default_rng(17)
     a, x, b = _sys(rng, 6)
+    now = SolveService.now()
     svc = SolveService(batch_slots=2)
     rid_fifo = svc.submit(a, b, method="cholesky")
-    rid_late = svc.submit(a, b, method="cholesky", deadline=1.0)
+    rid_late = svc.submit(a, b, method="cholesky", deadline=now + 120.0)
     rid_hi = svc.submit(a, b, method="cholesky", priority=5)
-    rid_soon = svc.submit(a, b, method="cholesky", deadline=0.5)
+    rid_soon = svc.submit(a, b, method="cholesky", deadline=now + 60.0)
 
     order = []
     orig = svc._dispatch_micro_batch
@@ -424,40 +470,74 @@ def test_service_priority_deadline_admission_order():
     assert set(res) == {rid_fifo, rid_late, rid_hi, rid_soon}
 
 
-def test_service_midflight_failure_requeues_every_ticket_at_rank():
-    """A device-side fault surfacing at harvest (not host build) still
-    re-queues EVERY ticket of the drain — including already-delivered
-    ones — at original admission rank."""
-    import repro.serving.solve_service as ss
+def test_service_expired_deadline_rejected_never_dispatched():
+    """An expired ticket is rejected at pop time with deadline_expired
+    — it never reaches a device — while fresh tickets still solve."""
+    rng = np.random.default_rng(22)
+    a, x, b = _sys(rng, 6)
+    svc = SolveService(batch_slots=1)
+    stale = svc.submit(a, b, method="cholesky",
+                       deadline=SolveService.now() - 1.0)
+    fresh = svc.submit(a, b, method="cholesky",
+                       deadline=SolveService.now() + 60.0)
+
+    dispatched = []
+    orig = svc._dispatch_micro_batch
+
+    def spy(pipe, chunk, dev):
+        dispatched.extend(t.rid for t in chunk)
+        return orig(pipe, chunk, dev)
+
+    svc._dispatch_micro_batch = spy
+    res = svc.drain()
+    assert stale not in dispatched
+    err = res[stale]
+    assert isinstance(err, SolveError) and err.kind == "deadline_expired"
+    assert svc.stats["deadline_expired"] == 1
+    np.testing.assert_allclose(res[fresh].x, np.linalg.solve(a, b),
+                               rtol=1e-6, atol=1e-9)
+
+
+def test_service_queue_depth_shedding_drops_lowest_rank():
+    """max_queue_depth sheds the lowest-admission-rank excess with a
+    structured shed error; the admitted head still solves."""
+    rng = np.random.default_rng(23)
+    a, x, b = _sys(rng, 6)
+    svc = SolveService(batch_slots=2, max_queue_depth=2)
+    hi = svc.submit(a, b, method="cholesky", priority=5)
+    mid = svc.submit(a, b, method="cholesky")
+    lo = svc.submit(a, b, method="cholesky", priority=-1)
+    res = svc.drain()
+    assert isinstance(res[lo], SolveError) and res[lo].kind == "shed"
+    assert svc.stats["shed"] == 1
+    for rid in (hi, mid):
+        np.testing.assert_allclose(res[rid].x, np.linalg.solve(a, b),
+                                   rtol=1e-6, atol=1e-9)
+
+
+def test_service_midflight_injected_fault_retries_to_delivery():
+    """A device-side fault surfacing at harvest (injected mid-stream by
+    the chaos injector) is retried transparently: every ticket still
+    delivers a correct solution exactly once, and the drain's recovery
+    work is visible in stats."""
+    from repro.serving.faults import FaultInjector, FaultPlan
 
     rng = np.random.default_rng(18)
-    svc = SolveService(batch_slots=1, inflight_per_device=2)
     systems = [_sys(rng, 6) for _ in range(4)]
+    # the 3rd dispatch's device dies — exact, seeded, layout-independent
+    inj = FaultInjector(FaultPlan(schedule=((2, "device_fault"),)))
+    svc = SolveService(batch_slots=1, inflight_per_device=2,
+                       fault_injector=inj)
     rids = [svc.submit(a, b, method="cholesky") for a, x, b in systems]
-
-    orig = ss.solve_batch_submit
-    calls = {"n": 0}
-
-    def faulting(*args, **kw):
-        pending = orig(*args, **kw)
-        calls["n"] += 1
-        if calls["n"] == 3:                      # fault lands mid-stream
-
-            def boom():
-                raise RuntimeError("device fault")
-
-            pending._finalize = boom
-        return pending
-
-    ss.solve_batch_submit = faulting
-    try:
-        with pytest.raises(RuntimeError, match="device fault"):
-            svc.drain()
-    finally:
-        ss.solve_batch_submit = orig
-    # micro-batches 1-2 were harvested before the fault; they are back
-    # anyway, and the queue replays in the original order
-    assert [t.rid for t in svc.queue.pop_all()] == rids
+    res = svc.drain()
+    assert set(res) == set(rids)               # exactly-once, no raise
+    for (a, x, b), rid in zip(systems, rids):
+        np.testing.assert_allclose(res[rid].x, np.linalg.solve(a, b),
+                                   rtol=1e-6, atol=1e-9)
+    assert svc.stats["fault_injections"] == 1
+    assert svc.stats["retries"] == 1
+    assert svc.stats["errors"]["device_fault"] == 0
+    assert len(svc.queue) == 0
 
 
 def test_service_double_buffered_dispatch_parity():
