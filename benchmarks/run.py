@@ -30,6 +30,13 @@ device-scaling monotonicity check runs whether or not a baseline file
 is given); ``--smoke`` shrinks the service stream to the CI-sized
 pass.
 
+The ``--newton`` / ``--fem`` phases (default: unfiltered runs) run the
+PR-8 workloads — batched-vs-looped Newton per-iteration wall (plus the
+service-session round-trip) and the mixed-grid FEM Poisson stream
+through the solve service — writing ``BENCH_pr8.json``
+(``--json-newton-fem`` to relocate) and gating against a committed
+``BENCH_pr8.json`` under the same ``--baseline`` machinery.
+
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src:. python -m benchmarks.run --only none \
@@ -88,6 +95,18 @@ def main() -> None:
                          "BENCH_*.json (>25%% regression fails); bare "
                          "--baseline picks the newest committed "
                          "BENCH_pr7/pr6/pr5.json")
+    ap.add_argument("--newton", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="run the batched-Newton phase (batched vs "
+                         "looped per-iteration wall + service-session "
+                         "round-trip); default: only on unfiltered runs")
+    ap.add_argument("--fem", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="run the FEM mesh-stream phase (mixed-grid "
+                         "Poisson through the solve service); default: "
+                         "only on unfiltered runs")
+    ap.add_argument("--json-newton-fem", default="BENCH_pr8.json",
+                    help="newton/fem baseline output path ('' to skip)")
     args = ap.parse_args()
 
     from benchmarks.common import emit
@@ -165,6 +184,37 @@ def main() -> None:
             print("bench_json,service_gate,FAIL", file=sys.stderr)
             raise SystemExit(1)
         print("bench_json,service_gate,OK")
+
+    want_newton = args.newton if args.newton is not None else not only
+    want_fem = args.fem if args.fem is not None else not only
+    if want_newton or want_fem:
+        import os
+
+        from benchmarks.newton_fem import apply_gate as nf_gate, build_doc as nf_doc
+
+        t8 = time.time()
+        doc_nf = nf_doc(smoke=bool(args.smoke or not args.full),
+                        newton=want_newton, fem=want_fem)
+        print(f"newton_fem,wall_s,{time.time() - t8:.1f}")
+        if args.json_newton_fem:
+            with open(args.json_newton_fem, "w") as fh:
+                json.dump(doc_nf, fh, indent=2, sort_keys=True, default=str)
+            print(f"bench_json,path,{args.json_newton_fem}")
+        nf_baseline = args.baseline or ""
+        if nf_baseline == "auto":
+            nf_baseline = "BENCH_pr8.json" if os.path.exists(
+                "BENCH_pr8.json") else ""
+            if nf_baseline:
+                print(f"newton_fem,baseline_file,{nf_baseline}")
+        violations = nf_gate(doc_nf, nf_baseline)
+        for v in violations:
+            print(f"newton_fem,regression,{v['metric']}: "
+                  f"{v['current']:.4g} vs baseline {v['baseline']:.4g}",
+                  file=sys.stderr)
+        if doc_nf["parity_failures"] or violations:
+            print("bench_json,newton_fem_gate,FAIL", file=sys.stderr)
+            raise SystemExit(1)
+        print("bench_json,newton_fem_gate,OK")
     print(f"total,wall_s,{time.time() - t0:.1f}")
 
 

@@ -3,25 +3,28 @@ steps, with the paper's analog solver as the optimizer's SPD-solve
 backend.
 
     PYTHONPATH=src python examples/train_lm.py [--steps 300] \
-        [--optimizer analog_newton|adamw] [--params 100]
+        [--optimizer analog_newton|adamw] [--smoke]
 
 The model is a qwen3-family decoder sized to ~100M params.  With
 ``--optimizer analog_newton`` every preconditioner refresh solves its
-block systems through the simulated RNM circuit (2n transform ->
-netlist -> non-ideal operating point) — the paper's accelerator in the
-training loop.  Checkpointing/resume runs through the fault-tolerant
-manager; kill and rerun to see auto-resume.
+block systems through the simulated RNM circuit as ONE batched
+``solve_batch`` call over all layer blocks on a cached stamp pattern
+(2n transform -> netlist -> non-ideal operating point) — the paper's
+accelerator in the training loop; the refresh accounting
+(:data:`repro.optim.analog_newton.REFRESH_STATS`) is printed at the
+end.  Checkpointing/resume runs through the fault-tolerant manager;
+kill and rerun to see auto-resume.  ``--smoke`` shrinks the model and
+step count to a seconds-scale CI configuration.
 """
 
 import argparse
 import dataclasses
-
-from repro.configs import get_config
-from repro.launch.train import train_loop
-from repro.optim.analog_newton import AnalogNewtonConfig
+import importlib
 
 
 def lm_100m():
+    from repro.configs import get_config
+
     base = get_config("qwen3_8b")
     return dataclasses.replace(
         base,
@@ -37,20 +40,64 @@ def lm_100m():
     )
 
 
-def main():
+def lm_smoke():
+    """Seconds-scale CI model: same architecture family, tiny dims."""
+    from repro.configs import get_config
+
+    base = get_config("qwen3_8b")
+    return dataclasses.replace(
+        base,
+        arch_id="qwen3_smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=512,
+        dtype="float32",
+        param_dtype="float32",
+    )
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=192)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--optimizer", default="analog_newton",
                     choices=["adamw", "analog_newton"])
     ap.add_argument("--lr", type=float, default=None,
                     help="default: 3e-4 adamw / 0.02 analog_newton "
                          "(relative step via the LAMB trust ratio)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + few steps (CI configuration)")
+    args = ap.parse_args(argv)
 
-    cfg = lm_100m()
+    an = importlib.import_module("repro.optim.analog_newton")
+    from repro.launch.train import train_loop
+
+    if args.smoke:
+        cfg = lm_smoke()
+        steps = args.steps or 4
+        batch = args.batch or 2
+        seq = args.seq or 32
+        acfg = an.AnalogNewtonConfig(
+            block=16, min_dim=32, max_blocks=8, refresh_every=2,
+            backend="analog_2n", opamp="AD712",
+        )
+        ckpt_dir = None
+    else:
+        cfg = lm_100m()
+        steps = args.steps or 300
+        batch = args.batch or 4
+        seq = args.seq or 192
+        acfg = an.AnalogNewtonConfig(
+            block=32, min_dim=256, max_blocks=24, refresh_every=100,
+            backend="analog_2n", opamp="AD712",
+        )
+        ckpt_dir = args.ckpt_dir
+
     from repro.models.model import count_params, init_params
     import jax
 
@@ -59,25 +106,29 @@ def main():
     print(f"model: {cfg.arch_id}, {n/1e6:.1f}M params, "
           f"optimizer={args.optimizer}")
 
-    acfg = AnalogNewtonConfig(
-        block=32, min_dim=256, max_blocks=24, refresh_every=100,
-        backend="analog_2n", opamp="AD712",
-    )
+    an.reset_refresh_stats()
     lr = args.lr or (0.02 if args.optimizer == "analog_newton" else 3e-4)
     out = train_loop(
         cfg,
-        steps=args.steps,
-        batch_size=args.batch,
-        seq_len=args.seq,
+        steps=steps,
+        batch_size=batch,
+        seq_len=seq,
         optimizer_name=args.optimizer,
         lr=lr,
-        ckpt_dir=args.ckpt_dir,
+        ckpt_dir=ckpt_dir,
         ckpt_every=100,
         analog_cfg=acfg if args.optimizer == "analog_newton" else None,
     )
     hist = out["history"]
     print(f"\nloss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} over "
-          f"{args.steps} steps")
+          f"{steps} steps")
+    if args.optimizer == "analog_newton":
+        rs = an.REFRESH_STATS
+        print(f"refreshes: {rs.refreshes}, solve_batch calls: "
+              f"{rs.solve_batch_calls} (one per refresh), systems solved: "
+              f"{rs.systems_solved}, stamp patterns derived: "
+              f"{rs.pattern_derivations}")
+    return out
 
 
 if __name__ == "__main__":

@@ -1430,6 +1430,9 @@ def transient_batch(
     check_every: int | None = None,
     x_ref: np.ndarray | None = None,
     dt_policy: str = "diag",
+    nl_t_end: float = 2e-4,
+    nl_n_samples: int = 400,
+    nl_safety: float = 0.4,
 ) -> BatchTransientResult:
     """Batched step-response settling analysis (supplies step at t=0).
 
@@ -1441,7 +1444,15 @@ def transient_batch(
     the ELL operators, predicts the settling time from the deflated
     rightmost-mode extraction without integrating (within 2x of the
     exact-eig slow mode on the reference set; the result additionally
-    carries the ``certified`` stability flags); ``"auto"`` — eig up to
+    carries the ``certified`` stability flags); ``"nonlinear"`` — the
+    slew-clipped, rail-clamped RK4 integration
+    (:mod:`repro.core.transient_nl`, one vmapped scan over the batch):
+    the Fig. 8 instability signature — ``stable`` is False when any
+    active amp pins at a rail OR the trajectory never enters the
+    settle band around the DC fixed point within ``nl_t_end``
+    (``nl_t_end`` / ``nl_n_samples`` / ``nl_safety`` control the
+    horizon, the sample grid, and the RK4 stability margin; the other
+    time controls belong to the linear paths); ``"auto"`` — eig up to
     ``EIG_STATE_LIMIT`` states, euler beyond.
 
     On the euler path ``stable`` means *settled within the
@@ -1513,6 +1524,59 @@ def transient_batch(
             out.dominant_tau[ii] = res.dominant_tau
             out.mirror_residual[ii] = res.mirror_residual
         return out
+    if method == "nonlinear":
+        # slew-clipped, rail-clamped RK4 (one vmapped scan): the
+        # instability verdict is physical — an active amp pinned at a
+        # rail (Sec. III-C.2) — and settling is measured on the sample
+        # grid against the DC fixed point, like the linear paths
+        from repro.core import transient_nl
+
+        bss = assemble_batch(
+            nets, opamp, v_os=v_os, buffers=buffers, pattern=pattern
+        )
+        tr = transient_nl.nonlinear_transient_batch(
+            nets, opamp,
+            t_end=nl_t_end,
+            n_samples=nl_n_samples,
+            v_os=v_os,
+            safety=nl_safety,
+            bss=bss,
+        )
+        b_count = len(nets)
+        nu = bss.n_unknowns
+        z_star = dc_solve_batch(bss)
+        x_star = z_star[:, :nu]
+        tol = np.maximum(
+            params.settle_rtol * np.abs(x_star)[:, None, :],
+            params.settle_atol,
+        )
+        ok = np.all(np.abs(tr.x - x_star[:, None, :]) <= tol, axis=2)
+        # first sample index from which the trajectory stays in-band
+        viol = ~ok[:, ::-1]
+        last_bad = np.where(
+            viol.any(axis=1),
+            ok.shape[1] - 1 - np.argmax(viol, axis=1),
+            -1,
+        )
+        settled = ok[:, -1] & ~tr.saturated
+        idx = np.clip(last_bad + 1, 0, ok.shape[1] - 1)
+        settle_time = np.where(settled, tr.times[idx], np.inf)
+        nn = bss.n_nodes
+        if nn == 2 * nu:
+            mirror = np.max(
+                np.abs(z_star[:, :nu] + z_star[:, nu: 2 * nu]), axis=1
+            )
+        else:
+            mirror = np.zeros(b_count)
+        return BatchTransientResult(
+            stable=settled,
+            settle_time=settle_time,
+            x_converged=np.where(settled[:, None], tr.x_final, np.nan),
+            max_re_eig=np.full(b_count, np.nan),
+            dominant_tau=np.full(b_count, np.nan),
+            mirror_residual=mirror,
+            method="nonlinear",
+        )
     if method == "spectral":
         # estimator only: extreme-eigenvalue bounds on the device-
         # resident ELL operators — no dense build, no integration

@@ -224,15 +224,51 @@ class PendingBatchSolve:
     :class:`BatchSolveResult`; it returns exactly what ``solve_batch``
     with the same arguments returns, because ``solve_batch`` *is*
     submit + wait.  ``wait()`` is idempotent.
+
+    The analog paths are *two-phase*: ``_finalize`` harvests only the
+    device's DC operating point (the part that occupies the stream),
+    and ``_finish`` runs the post-DC analysis — the settling transient
+    and the digital-fallback check — on the harvested result.
+    :meth:`wait_dc` blocks on phase one alone, after which the stream
+    that ran the solve is free for its next dispatch; :meth:`wait`
+    composes both phases, so blocking callers see the exact pre-split
+    semantics.  ``split`` tells a scheduler whether deferring the
+    finish phase buys anything (digital handles are single-phase).
     """
 
     method: str
     _finalize: Callable[[], BatchSolveResult]
     _done: BatchSolveResult | None = None
+    _finish: Callable[[BatchSolveResult], BatchSolveResult] | None = None
+    _dc: BatchSolveResult | None = None
+
+    @property
+    def split(self) -> bool:
+        """True when :meth:`wait_dc` frees the stream before the finish
+        phase (settle sweep / fallback) has run."""
+        return self._finish is not None
+
+    def wait_dc(self) -> BatchSolveResult:
+        """Block on the *device phase* only (DC solve harvest).
+
+        For a split handle the returned result carries no settle
+        metrics and no fallback yet — :meth:`wait` completes them.  For
+        a single-phase handle this is :meth:`wait`.  Idempotent.
+        """
+        if self._done is not None:
+            return self._done
+        if self._finish is None:
+            return self.wait()
+        if self._dc is None:
+            self._dc = self._finalize()
+        return self._dc
 
     def wait(self) -> BatchSolveResult:
         if self._done is None:
-            self._done = self._finalize()
+            if self._finish is not None:
+                self._done = self._finish(self.wait_dc())
+            else:
+                self._done = self._finalize()
         return self._done
 
 
@@ -349,11 +385,13 @@ def solve_batch_submit(
     which *is* ``solve_batch_submit(...).wait()`` — parity between the
     blocking and pipelined paths holds by construction.
 
-    ``compute_settling`` work runs inside ``wait()`` (the settling
-    analysis shares the DC assembly and its transient sweep is
-    synchronous), so settling requests hold their stream for the full
-    analysis — one reason the solve service buckets them at exact
-    ``n`` instead of padding.
+    The analog handle is two-phase: ``wait_dc()`` harvests the DC
+    operating point — the only part occupying the dispatch stream —
+    and ``wait()`` additionally runs the finish phase
+    (``compute_settling`` transient + digital fallback).  A pipelined
+    caller (the solve service) harvests the DC phase, re-arms the
+    stream, and defers the synchronous settle sweep; a blocking caller
+    just calls ``wait()`` and sees the composed result.
     """
     a = np.asarray(a, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
@@ -400,7 +438,7 @@ def solve_batch_submit(
         device=device,
     )
 
-    def finalize() -> BatchSolveResult:
+    def finalize_dc() -> BatchSolveResult:
         op = pending_op.wait()
         info: dict[str, Any] = {
             "design": np.asarray([net.design for net in nets]),
@@ -415,13 +453,15 @@ def solve_batch_submit(
             "max_abs_error": op.max_abs_error,
             "err_fullscale": op.err_fullscale,
         }
-        result = BatchSolveResult(
+        return BatchSolveResult(
             x=op.x,
             method=method,
             stable=~op.amp_saturated,
             settle_time=None,
             info=info,
         )
+
+    def finish(result: BatchSolveResult) -> BatchSolveResult:
         if compute_settling:
             # x_ref reaches the transient engine only on explicit opt-in
             # (or for the estimator-only spectral path, where it merely
@@ -458,7 +498,7 @@ def solve_batch_submit(
             )
         return result
 
-    return PendingBatchSolve(method=method, _finalize=finalize)
+    return PendingBatchSolve(method=method, _finalize=finalize_dc, _finish=finish)
 
 
 def solve_batch(

@@ -12,6 +12,21 @@ reaches the amplifier maximum or minimum output voltage" (Sec. III-C.2)
 with fixed-step RK4 under ``jax.lax.scan`` (float64; repro.core enables
 x64).  Used by the Fig. 8 stability benchmark and as a cross-check of
 the LTI settling times.
+
+The primary entry point is :func:`nonlinear_transient_batch`: a batch
+of netlists assembles on one shared :class:`~repro.core.engine.
+StampPattern` (``assemble_batch``) and integrates as a single vmapped
+RK4 scan over the ``(B,)`` systems — saturation and slew masks are
+pattern-static, and per-system ``amp_active`` keeps inactive union
+slots out of the rail verdict.  :func:`nonlinear_transient` is the
+B=1 wrapper over the same machinery (parity by construction), and
+``engine.transient_batch(method="nonlinear")`` dispatches here so the
+Fig. 8 stability check joins the batched settling machinery.
+
+All systems of a batch integrate with one shared ``dt`` (the stiffest
+system's RK4 stability bound — Gershgorin row-sum estimate); pass
+``dt=`` to pin it, e.g. to compare a batch row against its B=1
+reference on the identical step grid.
 """
 
 from __future__ import annotations
@@ -23,9 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core.network import Netlist
 from repro.core.specs import OpAmpSpec, AD712
-from repro.core.transient import assemble_state_space
 
 
 @dataclasses.dataclass
@@ -35,6 +50,22 @@ class NLTrace:
     amp_out: np.ndarray          # (n_samples, n_amps)
     saturated: bool              # any amp pinned at a rail at the end
     x_final: np.ndarray
+
+
+@dataclasses.dataclass
+class BatchNLTrace:
+    """Batched :class:`NLTrace` on a shared sample grid."""
+
+    times: np.ndarray            # (n_samples,) shared across the batch
+    x: np.ndarray                # (B, n_samples, n_unknowns)
+    amp_out: np.ndarray          # (B, n_samples, n_amp_slots)
+    saturated: np.ndarray        # (B,) bool — active amps only
+    x_final: np.ndarray          # (B, n_unknowns)
+    z_final: np.ndarray          # (B, n_states) full final state
+    dt: float                    # shared RK4 step
+
+    def __len__(self) -> int:
+        return self.x.shape[0]
 
 
 @partial(jax.jit, static_argnames=("n_steps", "store_every"))
@@ -68,6 +99,97 @@ def _integrate(m, c, int_mask, out_mask, slew, rail, z0, dt, n_steps: int, store
     return z_final, zs
 
 
+# one vmapped RK4 scan over the (B,) systems: per-system operator and
+# initial state, pattern-static masks/limits and the shared step count
+_integrate_batch = jax.vmap(
+    _integrate,
+    in_axes=(0, 0, None, None, None, None, 0, None, None, None),
+)
+
+
+def nonlinear_transient_batch(
+    nets: list[Netlist],
+    opamp: OpAmpSpec = AD712,
+    *,
+    t_end: float = 2e-4,
+    n_samples: int = 400,
+    v_os: list[np.ndarray | float | None] | None = None,
+    safety: float = 0.4,
+    dt: float | None = None,
+    pattern: "engine.StampPattern | None" = None,
+    buffers: bool = True,
+    bss: "engine.BatchedStateSpace | None" = None,
+) -> BatchNLTrace:
+    """Integrate the step response of B circuits from z(0) = 0 as one
+    vmapped RK4 scan on a shared stamp pattern.
+
+    ``dt`` defaults to the batch's stiffest RK4 stability bound
+    (``safety * 2.78 / max_k max_rate_k``) so one static step grid
+    serves every system; ``pattern`` pre-pins the shared stamp pattern
+    (the serving / benchmark passthrough).  ``saturated[k]`` consults
+    only system k's *active* amps — inactive union-pattern slots carry
+    no circuit and never pin.  ``bss`` hands over an already-assembled
+    batch (it MUST be ``assemble_batch`` output for exactly these nets
+    — the ``engine.transient_batch(method="nonlinear")`` passthrough).
+    """
+    if bss is None:
+        bss = engine.assemble_batch(
+            nets, opamp, v_os=v_os, buffers=buffers, pattern=pattern
+        )
+    nz = bss.n_states
+    b_count = bss.batch
+
+    # RK4 stability: dt < ~2.78/|lambda_max|; bound |lambda_max| by the
+    # max absolute row sum (Gershgorin) and add a safety margin.
+    if dt is None:
+        max_rate = float(np.max(np.sum(np.abs(bss.m), axis=2)))
+        dt = safety * 2.78 / max_rate
+    n_steps = max(int(np.ceil(t_end / dt)), n_samples)
+    store_every = max(n_steps // n_samples, 1)
+    n_steps = store_every * n_samples
+
+    int_mask = np.zeros(nz, dtype=bool)
+    int_mask[bss.amp_int_index] = True
+    out_mask = np.zeros(nz, dtype=bool)
+    out_mask[bss.amp_out_index] = True
+
+    z_final, zs = _integrate_batch(
+        jnp.asarray(bss.m),
+        jnp.asarray(bss.c),
+        jnp.asarray(int_mask),
+        jnp.asarray(out_mask),
+        bss.slew,
+        bss.amp_rail,
+        jnp.zeros((b_count, nz), dtype=jnp.float64),
+        dt,
+        n_steps,
+        store_every,
+    )
+    zs = np.asarray(zs)                      # (B, n_samples, nz)
+    z_final = np.asarray(z_final)            # (B, nz)
+    times = dt * store_every * (1 + np.arange(zs.shape[1]))
+    n_amp_slots = bss.amp_out_index.shape[0]
+    if n_amp_slots:
+        amp_final = z_final[:, bss.amp_out_index]          # (B, n_amp_slots)
+        saturated = np.any(
+            bss.amp_active & (np.abs(amp_final) >= 0.999 * bss.amp_rail),
+            axis=1,
+        )
+        amp_out = zs[:, :, bss.amp_out_index]
+    else:
+        saturated = np.zeros(b_count, dtype=bool)
+        amp_out = np.zeros((b_count, zs.shape[1], 0))
+    return BatchNLTrace(
+        times=times,
+        x=zs[:, :, : bss.n_unknowns],
+        amp_out=amp_out,
+        saturated=saturated,
+        x_final=z_final[:, : bss.n_unknowns],
+        z_final=z_final,
+        dt=float(dt),
+    )
+
+
 def nonlinear_transient(
     net: Netlist,
     opamp: OpAmpSpec = AD712,
@@ -77,44 +199,22 @@ def nonlinear_transient(
     v_os: np.ndarray | float | None = None,
     safety: float = 0.4,
 ) -> NLTrace:
-    """Integrate the circuit step response from z(0) = 0."""
-    ss = assemble_state_space(net, opamp, v_os=v_os)
-    nz = ss.n_states
+    """Integrate the circuit step response from z(0) = 0.
 
-    # RK4 stability: dt < ~2.78/|lambda_max|; bound |lambda_max| by the
-    # max absolute row sum (Gershgorin) and add a safety margin.
-    max_rate = float(np.max(np.sum(np.abs(ss.m), axis=1)))
-    dt = safety * 2.78 / max_rate
-    n_steps = max(int(np.ceil(t_end / dt)), n_samples)
-    store_every = max(n_steps // n_samples, 1)
-    n_steps = store_every * n_samples
-
-    int_mask = np.zeros(nz, dtype=bool)
-    int_mask[ss.amp_int_index] = True
-    out_mask = np.zeros(nz, dtype=bool)
-    out_mask[ss.amp_out_index] = True
-
-    z_final, zs = _integrate(
-        jnp.asarray(ss.m),
-        jnp.asarray(ss.c),
-        jnp.asarray(int_mask),
-        jnp.asarray(out_mask),
-        ss.slew,
-        ss.amp_rail,
-        jnp.zeros(nz, dtype=jnp.float64),
-        dt,
-        n_steps,
-        store_every,
+    B=1 wrapper over :func:`nonlinear_transient_batch` — single and
+    batched results agree by construction.
+    """
+    tr = nonlinear_transient_batch(
+        [net], opamp,
+        t_end=t_end,
+        n_samples=n_samples,
+        v_os=None if v_os is None else [v_os],
+        safety=safety,
     )
-    zs = np.asarray(zs)
-    z_final = np.asarray(z_final)
-    times = dt * store_every * (1 + np.arange(zs.shape[0]))
-    amp_final = z_final[ss.amp_out_index] if ss.amp_out_index.size else np.zeros(0)
-    saturated = bool(np.any(np.abs(amp_final) >= 0.999 * ss.amp_rail)) if amp_final.size else False
     return NLTrace(
-        times=times,
-        x=zs[:, : ss.n_unknowns],
-        amp_out=zs[:, ss.amp_out_index] if ss.amp_out_index.size else np.zeros((zs.shape[0], 0)),
-        saturated=saturated,
-        x_final=z_final[: ss.n_unknowns],
+        times=tr.times,
+        x=tr.x[0],
+        amp_out=tr.amp_out[0],
+        saturated=bool(tr.saturated[0]),
+        x_final=tr.x_final[0],
     )

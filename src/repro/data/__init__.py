@@ -8,4 +8,11 @@ from repro.data.spd import (
     random_spd_fixed_conductance,
     random_rhs_from_solution,
 )
-from repro.data.fem import poisson_2d
+from repro.data.fem import (
+    MeshProblem,
+    PoissonEll,
+    mesh_stream,
+    poisson_2d,
+    poisson_2d_ell,
+    poisson_rhs,
+)

@@ -1,7 +1,16 @@
-"""Optimizers: AdamW (baseline) and AnalogNewton — the paper's RNM
-solver integrated as the SPD-solve backend of a layerwise second-order
-preconditioner."""
+"""Optimizers: AdamW (baseline), AnalogNewton — the paper's RNM solver
+integrated as the SPD-solve backend of a layerwise second-order
+preconditioner — and the batched Newton/SQP drivers that push every
+iteration's linearized systems through ``solve_batch``."""
 
 from repro.optim.adamw import adamw
 from repro.optim.analog_newton import analog_newton
+from repro.optim.batched_newton import (
+    BatchedNewtonConfig,
+    NewtonTrace,
+    newton_batch,
+    newton_kkt_batch,
+    newton_kkt_looped,
+    newton_looped,
+)
 from repro.optim.schedule import cosine_schedule

@@ -1,5 +1,10 @@
 """Serving substrate: batched prefill/decode engine with KV/SSM caches,
-plus the request-batched multi-device solve service."""
+plus the request-batched multi-device solve service and its multi-round
+session kind for iterative (Newton/SQP) clients."""
 
 from repro.serving.engine import ServeEngine
-from repro.serving.solve_service import SolveService
+from repro.serving.solve_service import (
+    SessionRoundError,
+    SolveService,
+    SolveSession,
+)

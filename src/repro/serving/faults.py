@@ -186,11 +186,14 @@ class FaultInjector:
     def arm(self, pending, kind: str | None):
         """Plant ``kind`` into an in-flight solve handle.
 
-        ``device_fault`` raises from ``wait()`` — the point where an
-        async device error genuinely surfaces under JAX dispatch;
-        ``nonfinite`` corrupts every solution row of the harvested
-        batch (the whole micro-batch retries, like a real bad device
-        buffer); ``slow`` stalls the harvest by ``plan.slow_s``.
+        ``device_fault`` raises from the device-phase harvest
+        (``wait_dc()`` on a split handle, ``wait()`` otherwise) — the
+        point where an async device error genuinely surfaces under JAX
+        dispatch; ``nonfinite`` corrupts every solution row of the
+        *delivered* batch — after the finish phase on a split handle,
+        so the digital fallback cannot quietly repair the injected
+        corruption (the whole micro-batch retries, like a real bad
+        device buffer); ``slow`` stalls the harvest by ``plan.slow_s``.
         """
         if kind is None or kind == "build_error":
             return pending
@@ -203,14 +206,17 @@ class FaultInjector:
             pending._finalize = injected_device_fault
         elif kind == "nonfinite":
 
-            def injected_nonfinite():
-                batch = orig()
+            def corrupt(batch):
                 x = np.array(batch.x, dtype=np.float64, copy=True)
                 x[:, 0] = np.nan
                 batch.x = x
                 return batch
 
-            pending._finalize = injected_nonfinite
+            if pending._finish is not None:
+                orig_finish = pending._finish
+                pending._finish = lambda dc: corrupt(orig_finish(dc))
+            else:
+                pending._finalize = lambda: corrupt(orig())
         elif kind == "slow":
             slow_s = self.plan.slow_s
 

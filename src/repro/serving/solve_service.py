@@ -126,11 +126,49 @@ included — is re-queued at original admission rank; already-computed
 answers re-deliver from the ticket's result slot on the next drain
 without recomputation.
 
+Serving iterative workloads
+---------------------------
+
+A Newton / SQP client is not a stream of independent one-shots: it
+issues a *round* of B linearized systems, blocks on all B solutions,
+updates its iterates, and issues the next round — with the same
+``(n, method)`` class every round.  :class:`SolveSession` is the
+multi-round ticket kind for exactly this shape (create one with
+:meth:`SolveService.session`):
+
+* ``solve_round(a, b)`` submits the round's ``(B,)`` systems as
+  ordinary tickets into the same bucketed pipelines as one-shot
+  traffic and drains, returning the ``(B, n)`` solutions in submission
+  order.  It satisfies the ``rounds=`` executor protocol of
+  :func:`repro.optim.batched_newton.newton_batch` /
+  ``newton_kkt_batch``, so a Newton loop re-platforms onto the service
+  by passing ``rounds=service.session(...)``.
+* **pattern + jit reuse across rounds** is structural: bucket
+  pipelines (stamp pattern, compiled executables, fill statistics)
+  live in ``SolveService._pipelines`` and persist across drains, so
+  round k > 1 of an iteration-invariant sparsity class is pure cache
+  hits — ``pattern_derivations`` stays at 1 for the session's bucket.
+* **failure semantics apply per round**: each round's tickets carry
+  the session's ``priority`` and a fresh deadline
+  (``round_deadline_s``), and ride the full PR-7 machinery — retry
+  budgets, bisection, quarantine, fallback.  Exactly-once still holds
+  ticket-wise: a mid-round device fault is retried/bisected inside
+  the drain and the round completes; only a *terminal* per-ticket
+  failure surfaces, as a :class:`SessionRoundError` carrying the
+  per-system :class:`SolveError` map (the solutions of the round's
+  healthy systems are on the error).  Interleaved one-shot traffic
+  drained by a session round is delivered via
+  ``session.other_results``.
+
 Single-host caveats (see ROADMAP): netlist building and result
 unpacking stay host-side (they are the overlap *budget*, not dead
-time); the settle sweep's Pallas kernels run on the stream's device
-but hold their stream for the full transient analysis — one reason
-settling requests bucket at exact ``n``.
+time).  The settle path is split submit/wait
+(:meth:`repro.core.solver.PendingBatchSolve.wait_dc`): a settling
+micro-batch releases its stream slot as soon as its DC phase harvests,
+and the synchronous transient analysis runs as a deferred *finish*
+phase (``stats['settle_finish_s']``) — settling requests still bucket
+at exact ``n`` because settle metrics do not un-pad, but they no
+longer block their stream's double-buffering.
 """
 
 from __future__ import annotations
@@ -416,6 +454,7 @@ class SolveService:
         self._wall_s = 0.0
         self._host_build_s = 0.0
         self._device_wait_s = 0.0
+        self._settle_finish_s = 0.0
         self._unpack_s = 0.0
         self._real_sq = 0.0      # sum n^2 over served systems (stats)
         self._counters: dict[str, Any] = {
@@ -777,19 +816,26 @@ class SolveService:
         return None
 
     def _harvest(
-        self, flight: _InFlight, out, per_dev, work, inflight
+        self, flight: _InFlight, out, per_dev, work, inflight, finishing
     ) -> None:
-        """Block on one in-flight micro-batch and deliver its results.
+        """Block on one in-flight micro-batch's *device phase* and
+        either deliver it or hand it to the finish queue.
 
-        A device-side exception feeds the stream's circuit breaker
-        (tripping it quarantines the stream and re-queues its other
-        in-flights) and the group failure machinery; a clean harvest
-        resets the breaker and runs delivery acceptance (non-finite /
-        uncertified tickets re-enter the retry loop individually).
+        Only the DC phase (``wait_dc``) occupies the stream: as soon as
+        it harvests cleanly the stream slot is released and the breaker
+        records the success — a split handle (settle sweep / fallback
+        still pending) is appended to ``finishing`` for deferred
+        completion, so a settling micro-batch no longer blocks its
+        stream's double-buffering.  A device-side exception feeds the
+        stream's circuit breaker (tripping it quarantines the stream
+        and re-queues its other in-flights) and the group failure
+        machinery; a clean single-phase harvest runs delivery
+        acceptance immediately (non-finite / uncertified tickets
+        re-enter the retry loop individually).
         """
         t_wait = time.perf_counter()
         try:
-            batch = flight.pending.wait()
+            batch = flight.pending.wait_dc()
         except Exception as exc:
             self._device_wait_s += time.perf_counter() - t_wait
             per_dev[flight.dev] -= 1
@@ -804,6 +850,37 @@ class SolveService:
         self._device_wait_s += time.perf_counter() - t_wait
         per_dev[flight.dev] -= 1
         self.breaker.record_success(flight.dev)
+        if flight.pending.split:
+            finishing.append(flight)
+            return
+        self._deliver(flight, batch, out, work)
+
+    def _finish_flight(self, flight: _InFlight, out, work) -> None:
+        """Complete a deferred finish phase (settle sweep + fallback)
+        and deliver.
+
+        The flight's stream was already released and its DC harvest
+        recorded as a breaker success — a finish-phase exception is
+        charged to the ticket group (bisect / retry / fail-fast as
+        ``device_fault``) but never to the stream's breaker: the
+        stream did its job, the post-DC analysis failed.
+        """
+        t_finish = time.perf_counter()
+        try:
+            batch = flight.pending.wait()
+        except Exception as exc:
+            self._settle_finish_s += time.perf_counter() - t_finish
+            self._group_failed(
+                flight.pipe, flight.tickets, exc,
+                device_side=True, work=work, out=out,
+            )
+            return
+        self._settle_finish_s += time.perf_counter() - t_finish
+        self._deliver(flight, batch, out, work)
+
+    def _deliver(self, flight: _InFlight, batch, out, work) -> None:
+        """Delivery acceptance for one harvested micro-batch: unpack,
+        hand out terminal answers, route rejected tickets to retry."""
         t_unpack = time.perf_counter()
         bad = self._unpack_micro_batch(flight.pipe, flight.tickets, batch)
         self._unpack_s += time.perf_counter() - t_unpack
@@ -887,13 +964,14 @@ class SolveService:
                 work.append((pipe, tickets[start:start + self.batch_slots]))
 
         inflight: list[_InFlight] = []          # dispatch-FIFO harvest order
+        finishing: list[_InFlight] = []         # DC done, settle/fallback due
         per_dev = [0] * len(self.devices)
         # deterministic placement per drain: identical request streams
         # hit identical (bucket, device) pairs every drain, so a warmed
         # service never recompiles (jit executables are per device)
         self._rr = 0
         try:
-            while work or inflight:
+            while work or inflight or finishing:
                 if work:
                     pipe, group = work.popleft()
                     group = [t for t in group if self._admit_ticket(t, out)]
@@ -919,7 +997,15 @@ class SolveService:
                         continue
                     work.appendleft((pipe, group))
                 if inflight:
-                    self._harvest(inflight.pop(0), out, per_dev, work, inflight)
+                    self._harvest(
+                        inflight.pop(0), out, per_dev, work, inflight,
+                        finishing,
+                    )
+                elif finishing:
+                    # streams idle (or blocked): run deferred finish
+                    # phases — settle sweeps whose DC harvest already
+                    # freed their stream slot
+                    self._finish_flight(finishing.pop(0), out, work)
                 elif work:
                     # every stream quarantined with backoff pending:
                     # degrade to probing, never to a deadlock
@@ -935,6 +1021,17 @@ class SolveService:
         self._wall_s += time.perf_counter() - t0
         return out
 
+    # ----------------------------------------------------------- sessions
+    def session(self, **opts) -> "SolveSession":
+        """Open a multi-round ticket kind on this service.
+
+        ``opts`` are :class:`SolveSession` options — the per-round
+        submit options (``method`` / ``opamp`` / ``nonideal`` / ...)
+        plus ``priority`` and ``round_deadline_s``.  See the module
+        docstring's *Serving iterative workloads* section.
+        """
+        return SolveSession(self, **opts)
+
     # ------------------------------------------------------------- stats
     @property
     def stats(self) -> dict[str, Any]:
@@ -946,9 +1043,12 @@ class SolveService:
         and DC-solve cost scale with the *padded* size, over every
         dispatched slot including the repeat-fills — the full price
         paid for shape-stable pipelines.  ``host_build_s`` /
-        ``device_wait_s`` / ``unpack_s`` decompose ``wall_s``:
-        ``device_wait_s`` is the device time the overlapped host phases
-        could not hide.  ``pattern_derivations`` counts
+        ``device_wait_s`` / ``settle_finish_s`` / ``unpack_s``
+        decompose ``wall_s``: ``device_wait_s`` is the DC-phase device
+        time the overlapped host phases could not hide, and
+        ``settle_finish_s`` the deferred finish phases (settle sweep +
+        fallback) run after their stream slot was released.
+        ``pattern_derivations`` counts
         ``pattern_union`` calls per bucket (1 proves the cache served
         every later micro-batch on every stream).
 
@@ -989,6 +1089,7 @@ class SolveService:
             "wall_s": self._wall_s,
             "host_build_s": self._host_build_s,
             "device_wait_s": self._device_wait_s,
+            "settle_finish_s": self._settle_finish_s,
             "unpack_s": self._unpack_s,
             "devices": len(self.devices),
             "inflight_per_device": self.inflight_per_device,
@@ -1007,3 +1108,136 @@ class SolveService:
             ),
             "breaker": self.breaker.stats(),
         }
+
+
+class SessionRoundError(RuntimeError):
+    """One or more tickets of a session round failed *terminally*.
+
+    Raised by :meth:`SolveSession.solve_round` after the round's drain
+    completed — every ticket was answered exactly once; the ones that
+    exhausted the service's retry/fallback machinery carry a
+    :class:`~repro.serving.faults.SolveError` instead of a solution.
+    ``errors`` maps the round's batch index to that error; ``x`` holds
+    the round's solution array with the healthy systems filled in (the
+    failed rows are NaN), so a caller that can tolerate partial rounds
+    may recover without resubmitting the whole round.
+    """
+
+    def __init__(self, round_index: int, errors: dict, x: np.ndarray):
+        kinds = sorted({e.kind for e in errors.values()})
+        super().__init__(
+            f"session round {round_index}: {len(errors)} ticket(s) failed "
+            f"terminally ({', '.join(kinds)})"
+        )
+        self.round_index = round_index
+        self.errors = errors
+        self.x = x
+
+
+class SolveSession:
+    """Multi-round ticket kind: one iterative client's stream of solve
+    rounds through a :class:`SolveService`.
+
+    A round is a batch of B systems that must *all* resolve before the
+    client can form its next round (a Newton/SQP iteration's linearized
+    systems — see :mod:`repro.optim.batched_newton`).  Each
+    :meth:`solve_round` call submits the round as ordinary tickets
+    (shared ``priority``, one fresh absolute deadline from
+    ``round_deadline_s``) into the service's bucketed pipelines and
+    drains; pattern + jit reuse across rounds is inherited from the
+    service's persistent per-bucket pipelines, and the PR-7 failure
+    machinery (retry budgets, bisection, quarantine, fallback,
+    deadlines) applies per round.  The object satisfies the
+    ``rounds=`` executor protocol of
+    :func:`repro.optim.batched_newton.newton_batch`:
+    ``solve_round(a, b) -> x`` plus the ``solve_rounds`` /
+    ``pattern_derivations`` counters.
+
+    Construction options (beyond the service) are the per-round submit
+    options: ``method``, ``opamp``, ``nonideal``, ``d_policy``,
+    ``beta``, ``alpha``, ``tol``, ``max_iter`` — forwarded verbatim to
+    :meth:`SolveService.submit` — plus ``priority`` (admission class of
+    every round ticket) and ``round_deadline_s`` (per-round latency
+    budget, enforced as an absolute deadline stamped at round
+    submission).
+    """
+
+    def __init__(
+        self,
+        service: SolveService,
+        *,
+        priority: int = 0,
+        round_deadline_s: float | None = None,
+        **submit_opts,
+    ):
+        self.service = service
+        self.priority = int(priority)
+        self.round_deadline_s = (
+            None if round_deadline_s is None else float(round_deadline_s)
+        )
+        self.submit_opts = submit_opts
+        self.rounds = 0              # rounds completed (or failed terminally)
+        self.systems = 0             # tickets submitted across rounds
+        # interleaved one-shot traffic answered by this session's drains
+        self.other_results: dict[int, SolveResult | SolveError] = {}
+
+    # the batched_newton rounds-protocol counters
+    @property
+    def solve_rounds(self) -> int:
+        return self.rounds
+
+    @property
+    def pattern_derivations(self) -> int:
+        """Stamp patterns derived by the service since it started —
+        across *all* its buckets, so with the session as the only
+        analog client this is the session's own count (1 per
+        iteration-invariant sparsity class proves cross-round reuse).
+        """
+        return sum(
+            p.pattern_derivations for p in self.service._pipelines.values()
+        )
+
+    def solve_round(self, a, b) -> np.ndarray:
+        """Submit one round of ``(B,)`` systems and block for all B.
+
+        ``a`` is (B, n, n), ``b`` (B, n); returns the (B, n) solutions
+        in submission order.  Raises :class:`SessionRoundError` if any
+        ticket of the round failed terminally (the drain still answered
+        every ticket exactly once — partial solutions ride on the
+        error).
+        """
+        a = np.asarray(a, dtype=np.float64)
+        b = np.asarray(b, dtype=np.float64)
+        if a.ndim != 3 or b.ndim != 2 or a.shape[:2] != b.shape:
+            raise ValueError(
+                f"expected (B, n, n) and (B, n); got {a.shape}, {b.shape}"
+            )
+        deadline = (
+            None if self.round_deadline_s is None
+            else self.service.now() + self.round_deadline_s
+        )
+        rids = [
+            self.service.submit(
+                a[k], b[k],
+                priority=self.priority, deadline=deadline,
+                **self.submit_opts,
+            )
+            for k in range(a.shape[0])
+        ]
+        out = self.service.drain()
+        x = np.full_like(b, np.nan)
+        errors: dict[int, SolveError] = {}
+        for k, rid in enumerate(rids):
+            res = out.pop(rid)
+            if isinstance(res, SolveError):
+                errors[k] = res
+            else:
+                x[k] = res.x
+        # answers for tickets other clients queued on the same service
+        self.other_results.update(out)
+        index = self.rounds
+        self.rounds += 1
+        self.systems += len(rids)
+        if errors:
+            raise SessionRoundError(index, errors, x)
+        return x
