@@ -15,7 +15,11 @@ with ``--no-pr2``) also write a machine-readable perf trajectory to
 sparse n/B sweep points (n up to 2048 on the ELL path — sizes the
 dense operators cannot reach), the dense-vs-ELL speedup at the largest
 dense-feasible size, and the parity-guard verdict.  Future PRs regress
-against this file.
+against this file: with ``--baseline`` (bare form auto-picks the
+committed ``BENCH_pr2.json``, loaded before ``--json`` overwrites it)
+the fresh trajectory is diffed against it through the shared series
+gate — per-size sparse-sweep walls compare within the same
+``--full`` context, the dense-vs-ELL speedups always.
 
 The ``service`` phase (gate with ``--service`` / ``--no-service``;
 default mirrors the pr2 gate) runs the streamed solve-service
@@ -91,10 +95,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized service stream (full mix, 1 repeat)")
     ap.add_argument("--baseline", default=None, nargs="?", const="auto",
-                    help="gate the service phase against a committed "
+                    help="gate each phase against a committed "
                          "BENCH_*.json (>25%% regression fails); bare "
-                         "--baseline picks the newest committed "
-                         "BENCH_pr7/pr6/pr5.json")
+                         "--baseline auto-picks per phase: BENCH_pr2.json "
+                         "for the pr2 trajectory, the newest "
+                         "BENCH_pr7/pr6/pr5.json for the service phase, "
+                         "BENCH_pr8.json for newton/fem")
     ap.add_argument("--newton", default=None,
                     action=argparse.BooleanOptionalAction,
                     help="run the batched-Newton phase (batched vs "
@@ -131,7 +137,23 @@ def main() -> None:
 
     want_pr2 = args.pr2 if args.pr2 is not None else not only
     if want_pr2:
+        import os
+
         import jax
+
+        from benchmarks.solve_service import compare_to_baseline
+
+        # resolve and LOAD the committed baseline before --json
+        # overwrites it with the fresh trajectory
+        pr2_baseline = args.baseline or ""
+        if pr2_baseline == "auto":
+            pr2_baseline = ("BENCH_pr2.json"
+                            if os.path.exists("BENCH_pr2.json") else "")
+        base_doc = None
+        if pr2_baseline:
+            with open(pr2_baseline) as fh:
+                base_doc = json.load(fh)
+            print(f"pr2,baseline_file,{pr2_baseline}")
 
         doc = {
             "schema": BENCH_SCHEMA,
@@ -147,10 +169,18 @@ def main() -> None:
                 json.dump(doc, fh, indent=2, sort_keys=True)
             print(f"bench_json,path,{args.json}")
         # the drift gate fails the run whether or not the baseline
-        # file was written
-        if doc["parity_failures"]:
+        # file was written: parity first, then the series regression
+        # diff (sparse-sweep walls contextual, dense-vs-ELL speedups
+        # always compared) through the shared PR-6 gate machinery
+        violations = compare_to_baseline(doc, base_doc) if base_doc else []
+        for v in violations:
+            print(f"pr2,regression,{v['metric']}: "
+                  f"{v['current']:.4g} vs baseline {v['baseline']:.4g}",
+                  file=sys.stderr)
+        if doc["parity_failures"] or violations:
             print("bench_json,parity,FAIL", file=sys.stderr)
             raise SystemExit(1)
+        print("bench_json,pr2_gate,OK")
 
     want_service = args.service if args.service is not None else not only
     if want_service:

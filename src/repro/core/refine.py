@@ -1,0 +1,315 @@
+"""Mixed-precision iterative refinement around the analog solve.
+
+Real crosspoint hardware solves at low precision: digital-pot
+quantization, resistor tolerance and wiper resistance
+(:class:`repro.core.operating_point.NonIdealities`) perturb the stamped
+operator by a relative ``eps`` (~1e-2 for 8-bit pots at 1% tolerance),
+and a bf16 settle sweep adds its own ~1e-3 weight rounding.  Following
+Sun et al. (PAPERS.md, 2005.04530), such a solve is still an excellent
+*preconditioner*: each analog pass contracts the error by ~``eps``, so
+wrapping it as the inner solve of fp64 iterative refinement recovers
+full digital precision in ``log(tol) / log(eps)`` passes — ~5-6 analog
+solves from int8 hardware to 1e-10.
+
+Two drivers, both host-side fp64 loops around an abstract batched
+``inner_solve`` (the analog re-stamp/re-solve closure built by
+:func:`repro.core.solver.solve_batch_submit`):
+
+* :func:`refine_batch` — classic iterative refinement
+  ``x += inner(b - A x)``.  The contraction per pass is the inner
+  solve's relative error, so convergence is geometric and the iteration
+  count is a direct hardware-quality readout.
+* :func:`fcg_batch` — flexible conjugate gradients (Notay's FCG(1),
+  Polak-Ribiere beta): tolerates an inner solve that *changes between
+  iterations* (re-stamped supply pots draw fresh tolerance
+  perturbations) while converging faster than plain refinement when the
+  preconditioned spectrum still has structure.
+
+Both mirror the per-system convergence freezing contract of the
+batched digital methods (:mod:`repro.core.baselines`): a system whose
+relative fp64 residual has crossed ``tol`` leaves the active set — it
+stops consuming inner solves and its recorded ``iters`` is exactly
+what a single-system loop would produce.  Active rows are *subset*
+(not masked) into the inner solve, because its cost is a physical
+re-stamp per row.
+
+Stopping is budget-predictive (the "amplitude-aware" rule of the
+settling layer, applied to residual amplitude): from the measured
+contraction ``rho`` the driver projects the passes still needed to
+reach ``tol``; when that exceeds the remaining ``max_iters`` budget —
+or a pass fails to contract by at least ``stall_ratio`` — the row is
+marked *stalled* and escalates to the digital fallback immediately
+instead of burning the rest of its budget first.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_TINY = 1e-300
+
+REFINE_DRIVERS = ("ir", "fcg")
+
+
+@dataclasses.dataclass(frozen=True)
+class RefineSpec:
+    """Refinement contract for one :func:`~repro.core.solver.solve_batch`.
+
+    ``tol`` — target relative fp64 residual ``|b - A x| / |b|`` per
+    system.  ``max_iters`` — inner (analog) solve budget per system.
+    ``stall_ratio`` — minimum per-pass residual contraction; a pass
+    that contracts less marks the row stalled (escalate to fallback).
+    ``driver`` — ``"ir"`` (iterative refinement) or ``"fcg"``
+    (flexible CG).
+    """
+
+    tol: float = 1e-10
+    max_iters: int = 12
+    stall_ratio: float = 0.5
+    driver: str = "ir"
+
+    def __post_init__(self) -> None:
+        if self.driver not in REFINE_DRIVERS:
+            raise ValueError(
+                f"driver must be one of {REFINE_DRIVERS}, got {self.driver!r}"
+            )
+        if not self.tol > 0.0:
+            raise ValueError(f"tol must be > 0, got {self.tol}")
+        if self.max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+        if not (0.0 < self.stall_ratio < 1.0):
+            raise ValueError(f"stall_ratio in (0, 1), got {self.stall_ratio}")
+
+
+DEFAULT_REFINE = RefineSpec()
+
+
+def as_refine_spec(refine) -> RefineSpec | None:
+    """Normalize the ``refine=`` knob: None/False -> off, True -> the
+    default spec, a driver name -> default spec with that driver, a
+    :class:`RefineSpec` -> itself."""
+    if refine is None or refine is False:
+        return None
+    if refine is True:
+        return DEFAULT_REFINE
+    if isinstance(refine, str):
+        return RefineSpec(driver=refine)
+    if isinstance(refine, RefineSpec):
+        return refine
+    raise TypeError(f"refine must be None, bool, str or RefineSpec: {refine!r}")
+
+
+@dataclasses.dataclass
+class RefineResult:
+    x: np.ndarray          # (B, n) refined solutions (fp64)
+    residual: np.ndarray   # (B,) final relative fp64 residual
+    iters: np.ndarray      # (B,) int inner solves consumed
+    converged: np.ndarray  # (B,) bool residual <= tol
+    stalled: np.ndarray    # (B,) bool stopped by stall/hopeless detection
+
+
+def relative_residuals(a: np.ndarray, b: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Per-system fp64 relative residual ``|b - A x|_2 / |b|_2``.
+
+    Nonfinite rows of ``x`` report ``inf`` (they verify as failed, they
+    do not poison the batch).
+    """
+    a64 = np.asarray(a, dtype=np.float64)
+    b64 = np.asarray(b, dtype=np.float64)
+    x64 = np.asarray(x, dtype=np.float64)
+    b_norm = np.maximum(np.linalg.norm(b64, axis=1), _TINY)
+    finite = np.all(np.isfinite(x64), axis=1)
+    r = b64 - np.einsum("bij,bj->bi", a64, np.where(finite[:, None], x64, 0.0))
+    rel = np.linalg.norm(r, axis=1) / b_norm
+    return np.where(finite, rel, np.inf)
+
+
+def _project_hopeless(rel_new, rel_old, tol, remaining):
+    """Rows whose measured contraction cannot reach ``tol`` within the
+    remaining budget (the budget-predictive stopping rule)."""
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        rho = np.clip(rel_new / np.maximum(rel_old, _TINY), _TINY, 1.0 - 1e-12)
+        need = np.ceil(np.log(np.maximum(tol, _TINY) / np.maximum(rel_new, _TINY))
+                       / np.log(rho))
+    return np.isfinite(need) & (need > remaining) & (rel_new > tol)
+
+
+def refine_batch(
+    a: np.ndarray,
+    b: np.ndarray,
+    x0: np.ndarray,
+    inner_solve,
+    *,
+    spec: RefineSpec = DEFAULT_REFINE,
+) -> RefineResult:
+    """Iterative refinement: ``x += inner_solve(b - A x)`` to fp64.
+
+    ``inner_solve(idx, rhs)`` solves ``A[idx] d = rhs`` approximately
+    (the low-precision analog pass) for the active subset ``idx`` —
+    ``rhs`` is handed over at its natural (residual) scale; any
+    full-scale rescaling needed by the hardware model is the inner
+    solve's business.  Residuals, updates and the stopping rule are
+    fp64 on the host.
+
+    Per-system freezing: converged rows leave the active subset; a row
+    whose pass contracts less than ``spec.stall_ratio`` — or whose
+    projected passes-to-``tol`` exceed the remaining budget — is marked
+    stalled (a diverging pass is rolled back first).  Nonfinite ``x0``
+    rows are stalled immediately with ``residual = inf``.
+    """
+    a64 = np.asarray(a, dtype=np.float64)
+    b64 = np.asarray(b, dtype=np.float64)
+    x = np.array(x0, dtype=np.float64, copy=True)
+    b_count = x.shape[0]
+
+    b_norm = np.maximum(np.linalg.norm(b64, axis=1), _TINY)
+    finite = np.all(np.isfinite(x), axis=1)
+    r = np.where(
+        finite[:, None],
+        b64 - np.einsum("bij,bj->bi", a64, np.where(finite[:, None], x, 0.0)),
+        np.inf,
+    )
+    rel = np.where(finite, np.linalg.norm(
+        np.where(finite[:, None], r, 0.0), axis=1) / b_norm, np.inf)
+
+    iters = np.zeros(b_count, dtype=np.int64)
+    stalled = ~finite
+    active = finite & (rel > spec.tol)
+    while np.any(active):
+        idx = np.nonzero(active)[0]
+        d = np.asarray(inner_solve(idx, r[idx]), dtype=np.float64)
+        x[idx] += d
+        iters[idx] += 1
+        r_new = b64[idx] - np.einsum("bij,bj->bi", a64[idx], x[idx])
+        rel_new = np.linalg.norm(r_new, axis=1) / b_norm[idx]
+
+        worse = ~np.isfinite(rel_new) | (rel_new >= rel[idx])
+        if np.any(worse):
+            # a pass that moved away from the solution is rolled back:
+            # deliver the best iterate, not the last one
+            back = idx[worse]
+            x[back] -= d[worse]
+            rel_new = np.where(worse, rel[idx], rel_new)
+            r_new = np.where(worse[:, None], r[idx], r_new)
+        no_contract = rel_new > spec.stall_ratio * rel[idx]
+        hopeless = _project_hopeless(
+            rel_new, rel[idx], spec.tol, spec.max_iters - iters[idx]
+        )
+        r[idx] = r_new
+        rel[idx] = rel_new
+
+        stall_now = worse | no_contract | hopeless
+        stalled[idx[stall_now & (rel_new > spec.tol)]] = True
+        active[idx] = (
+            ~stall_now & (rel_new > spec.tol) & (iters[idx] < spec.max_iters)
+        )
+    return RefineResult(
+        x=x,
+        residual=rel,
+        iters=iters,
+        converged=rel <= spec.tol,
+        stalled=stalled,
+    )
+
+
+def fcg_batch(
+    a: np.ndarray,
+    b: np.ndarray,
+    x0: np.ndarray,
+    inner_solve,
+    *,
+    spec: RefineSpec = DEFAULT_REFINE,
+) -> RefineResult:
+    """Flexible CG with the analog pass as a variable preconditioner.
+
+    Notay's FCG(1): ``p_k = z_k + beta_k p_{k-1}`` with the
+    Polak-Ribiere ``beta_k = z_k.(r_k - r_{k-1}) / (z_{k-1}.r_{k-1})``
+    — the form that stays convergent when the preconditioner changes
+    between iterations (every analog pass re-stamps the supply pots, so
+    it does).  Same ``inner_solve`` contract, freezing, stall/budget
+    rules and result shape as :func:`refine_batch`.
+
+    A row whose search direction loses positive curvature
+    (``p.Ap <= 0`` — possible only through inner-solve error) is marked
+    stalled at its current iterate.
+    """
+    a64 = np.asarray(a, dtype=np.float64)
+    b64 = np.asarray(b, dtype=np.float64)
+    x = np.array(x0, dtype=np.float64, copy=True)
+    b_count, n = x.shape
+
+    b_norm = np.maximum(np.linalg.norm(b64, axis=1), _TINY)
+    finite = np.all(np.isfinite(x), axis=1)
+    r = np.where(
+        finite[:, None],
+        b64 - np.einsum("bij,bj->bi", a64, np.where(finite[:, None], x, 0.0)),
+        np.inf,
+    )
+    rel = np.where(finite, np.linalg.norm(
+        np.where(finite[:, None], r, 0.0), axis=1) / b_norm, np.inf)
+
+    p_prev = np.zeros((b_count, n))
+    r_prev = np.zeros((b_count, n))
+    zr_prev = np.zeros(b_count)
+    have_prev = np.zeros(b_count, dtype=bool)
+
+    iters = np.zeros(b_count, dtype=np.int64)
+    stalled = ~finite
+    active = finite & (rel > spec.tol)
+    while np.any(active):
+        idx = np.nonzero(active)[0]
+        z = np.asarray(inner_solve(idx, r[idx]), dtype=np.float64)
+        beta = np.where(
+            have_prev[idx],
+            np.einsum("bi,bi->b", z, r[idx] - r_prev[idx])
+            / np.where(zr_prev[idx] == 0.0, 1.0, zr_prev[idx]),
+            0.0,
+        )
+        p = z + beta[:, None] * p_prev[idx]
+        ap = np.einsum("bij,bj->bi", a64[idx], p)
+        pap = np.einsum("bi,bi->b", p, ap)
+        curved = pap > 0.0
+        alpha = np.where(curved, np.einsum("bi,bi->b", p, r[idx])
+                         / np.where(curved, pap, 1.0), 0.0)
+
+        x_new = x[idx] + alpha[:, None] * p
+        r_new = b64[idx] - np.einsum("bij,bj->bi", a64[idx], x_new)
+        rel_new = np.linalg.norm(r_new, axis=1) / b_norm[idx]
+        iters[idx] += 1
+
+        worse = ~curved | ~np.isfinite(rel_new) | (rel_new >= rel[idx])
+        keep = ~worse
+        x[idx[keep]] = x_new[keep]
+        rel_new = np.where(worse, rel[idx], rel_new)
+        r_new = np.where(worse[:, None], r[idx], r_new)
+        no_contract = rel_new > spec.stall_ratio * rel[idx]
+        hopeless = _project_hopeless(
+            rel_new, rel[idx], spec.tol, spec.max_iters - iters[idx]
+        )
+
+        r_prev[idx] = r[idx]
+        zr_prev[idx] = np.einsum("bi,bi->b", z, r[idx])
+        p_prev[idx] = p
+        have_prev[idx] = True
+        r[idx] = r_new
+        rel[idx] = rel_new
+
+        stall_now = worse | no_contract | hopeless
+        stalled[idx[stall_now & (rel_new > spec.tol)]] = True
+        active[idx] = (
+            ~stall_now & (rel_new > spec.tol) & (iters[idx] < spec.max_iters)
+        )
+    return RefineResult(
+        x=x,
+        residual=rel,
+        iters=iters,
+        converged=rel <= spec.tol,
+        stalled=stalled,
+    )
+
+
+def refine_driver(spec: RefineSpec):
+    """The driver function selected by ``spec.driver``."""
+    return {"ir": refine_batch, "fcg": fcg_batch}[spec.driver]

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, engine
+from repro.core import baselines, engine, refine as refine_mod
 from repro.core.network import (
     Netlist,
     build_preliminary,
@@ -44,8 +44,10 @@ from repro.core.operating_point import (
     DEFAULT_NONIDEAL,
     IDEAL,
     NonIdealities,
+    operating_point_batch,
     operating_point_batch_submit,
 )
+from repro.core.refine import RefineSpec  # noqa: F401  (re-export for callers)
 from repro.core.specs import OPAMPS, CircuitParams, DEFAULT_PARAMS, OpAmpSpec
 
 
@@ -175,21 +177,130 @@ def _apply_digital_fallback(
     )
     if not bad.any():
         return result
-    if method == "cholesky":
-        x_fb = np.asarray(
-            baselines.cholesky_solve_batch(jnp.asarray(a[bad]), jnp.asarray(b[bad]))
-        )
-    else:
-        x_fb = np.asarray(
-            baselines.cg_solve_batch(
-                jnp.asarray(a[bad]), jnp.asarray(b[bad]),
-                tol=tol, max_iter=max_iter,
-            ).x
-        )
     x = np.array(result.x, dtype=np.float64, copy=True)
-    x[bad] = x_fb
+    x[bad] = _digital_resolve(a[bad], b[bad], method=method, tol=tol,
+                              max_iter=max_iter)
     result.x = x
     result.info["fallback"] = np.where(bad, method, "")
+    return result
+
+
+def _digital_resolve(
+    a: np.ndarray, b: np.ndarray, *, method: str, tol: float, max_iter: int
+) -> np.ndarray:
+    """Digital re-solve of a (sub)batch — the fallback workhorse."""
+    if method == "cholesky":
+        return np.asarray(
+            baselines.cholesky_solve_batch(jnp.asarray(a), jnp.asarray(b))
+        )
+    return np.asarray(
+        baselines.cg_solve_batch(
+            jnp.asarray(a), jnp.asarray(b), tol=tol, max_iter=max_iter
+        ).x
+    )
+
+
+# per-system delivery paths of the graded-recovery pipeline (recorded in
+# info["precision_path"] when refine= is enabled):
+#   "analog"    — the raw analog solve already met the refinement tol
+#   "refined"   — iterative refinement converged to the tol
+#   "fallback"  — refinement stalled / exhausted; digital re-solve delivered
+#   "unrefined" — refinement failed and fallback="none": degraded result
+PRECISION_PATHS = ("analog", "refined", "fallback", "unrefined")
+
+
+def _apply_graded_recovery(
+    result: "BatchSolveResult",
+    a: np.ndarray,
+    b: np.ndarray,
+    *,
+    refspec: "refine_mod.RefineSpec",
+    method: str,
+    spec: OpAmpSpec,
+    ni: NonIdealities,
+    params: CircuitParams,
+    d_policy: str,
+    beta: float,
+    alpha: float,
+    pattern: "engine.StampPattern | None",
+    mesh,
+    device,
+    fallback: str,
+    tol: float,
+    max_iter: int,
+) -> "BatchSolveResult":
+    """Residual-verified graded recovery: verify -> refine -> fall back.
+
+    Replaces the binary fallback mask with a three-stage pipeline.  Every
+    analog solution is *verified* against its fp64 relative residual; rows
+    above ``refspec.tol`` enter mixed-precision iterative refinement
+    (:mod:`repro.core.refine`) where each inner pass re-stamps and
+    re-solves the *analog* circuit for the current residual — rescaled to
+    the original right-hand side's full scale first, because the
+    hardware's absolute error floor (op-amp offsets, supply-pot
+    quantization) would otherwise swamp a tiny residual RHS — and only
+    rows whose refinement stalls or exhausts its budget escalate to the
+    digital ``fallback``.  The delivery route is recorded per system in
+    ``info["precision_path"]`` (see :data:`PRECISION_PATHS`), alongside
+    ``info["residual"]`` (final fp64 relative residual) and
+    ``info["refine_iters"]`` (inner analog solves consumed).
+    """
+    b_count = a.shape[0]
+    tiny = np.finfo(np.float64).tiny
+    rel = refine_mod.relative_residuals(a, b, result.x)
+    refine_iters = np.zeros(b_count, dtype=np.int64)
+    path = np.full(b_count, "analog", dtype="<U9")
+    need = rel > refspec.tol
+    if need.any():
+        sel = np.flatnonzero(need)
+        bscale = np.maximum(np.max(np.abs(b), axis=1), tiny)
+
+        def inner_solve(idx: np.ndarray, rhs: np.ndarray) -> np.ndarray:
+            # analog inner pass: re-stamp the circuit for (A, r*s) with
+            # the SAME error model (deterministic per-net perturbation
+            # draws) and DC-solve it.  The residual is rescaled to the
+            # original RHS's full scale so the hardware's absolute error
+            # floor stays *relative* to the update being computed — the
+            # property that makes each pass contract by ~eps_hw.
+            rows = sel[np.asarray(idx)]
+            s = bscale[rows] / np.maximum(np.max(np.abs(rhs), axis=1), tiny)
+            nets_r = _build_nets(
+                a[rows], rhs * s[:, None], method,
+                d_policy=d_policy, beta=beta, alpha=alpha, params=params,
+            )
+            pat = (
+                pattern
+                if pattern is not None and engine.pattern_covers(pattern, nets_r)
+                else None
+            )
+            op = operating_point_batch(
+                nets_r, spec, nonideal=ni, pattern=pat, mesh=mesh,
+                device=device,
+            )
+            return np.asarray(op.x, dtype=np.float64) / s[:, None]
+
+        driver = refine_mod.refine_driver(refspec)
+        rr = driver(a[sel], b[sel], result.x[sel], inner_solve, spec=refspec)
+        x = np.array(result.x, dtype=np.float64, copy=True)
+        x[sel] = rr.x
+        rel[sel] = rr.residual
+        refine_iters[sel] = rr.iters
+        path[sel] = np.where(rr.converged, "refined", "unrefined")
+
+        bad = sel[~rr.converged]
+        if bad.size and fallback != "none":
+            x[bad] = _digital_resolve(
+                a[bad], b[bad], method=fallback, tol=tol, max_iter=max_iter
+            )
+            rel[bad] = refine_mod.relative_residuals(a[bad], b[bad], x[bad])
+            path[bad] = "fallback"
+        result.x = x
+    result.info["residual"] = rel
+    result.info["refine_iters"] = refine_iters
+    result.info["precision_path"] = path
+    # kept for callers of the binary-era contract (service counters):
+    # per-system digital re-solve method, "" = analog/refined delivery
+    result.info["fallback"] = np.where(path == "fallback", fallback, "")
     return result
 
 
@@ -366,6 +477,9 @@ def solve_batch_submit(
     max_iter: int = 10000,
     fallback: str = "cholesky",
     fallback_residual_tol: float = FALLBACK_RESIDUAL_TOL,
+    refine=None,
+    sweep_dtype: str = "float32",
+    settle_x0: np.ndarray | None = None,
     pattern: "engine.StampPattern | None" = None,
     mesh=None,
     device=None,
@@ -415,6 +529,7 @@ def solve_batch_submit(
             f"unknown fallback {fallback!r}: expected one of "
             f"{FALLBACK_METHODS}"
         )
+    refspec = refine_mod.as_refine_spec(refine)
 
     spec = OPAMPS[opamp] if isinstance(opamp, str) else opamp
     ni = IDEAL if nonideal is None else nonideal
@@ -476,6 +591,8 @@ def solve_batch_submit(
                 max_steps=settle_max_steps,
                 x_ref=settle_ref,
                 dt_policy=settle_dt_policy,
+                x0=settle_x0,
+                sweep_dtype=sweep_dtype,
             )
             result.settle_time = tr.settle_time
             result.stable = result.stable & tr.stable
@@ -483,11 +600,25 @@ def solve_batch_submit(
             result.info["dominant_tau"] = tr.dominant_tau
             result.info["mirror_residual"] = tr.mirror_residual
             result.info["settle_method"] = tr.method
+            if tr.settle_steps is not None:
+                result.info["settle_steps"] = np.asarray(
+                    tr.settle_steps, dtype=np.int64
+                )
             if tr.certified is not None:
                 # spectral estimator: converged rightmost mode +
                 # contracting slow subspace (see
                 # repro.core.spectral.SpectralBounds)
                 result.info["settle_certified"] = tr.certified
+        if refspec is not None:
+            # residual-verified graded recovery: fp64 verify -> analog
+            # iterative refinement -> digital fallback only for rows
+            # whose refinement stalls (see _apply_graded_recovery)
+            return _apply_graded_recovery(
+                result, a, b, refspec=refspec, method=method, spec=spec,
+                ni=ni, params=params, d_policy=d_policy, beta=beta,
+                alpha=alpha, pattern=pattern, mesh=mesh, device=device,
+                fallback=fallback, tol=tol, max_iter=max_iter,
+            )
         if fallback != "none":
             # numerical graceful degradation: non-finite (or
             # uncertified-with-residual-overflow) analog rows re-solve
@@ -522,6 +653,9 @@ def solve_batch(
     max_iter: int = 10000,
     fallback: str = "cholesky",
     fallback_residual_tol: float = FALLBACK_RESIDUAL_TOL,
+    refine=None,
+    sweep_dtype: str = "float32",
+    settle_x0: np.ndarray | None = None,
     pattern: "engine.StampPattern | None" = None,
     mesh=None,
     device=None,
@@ -576,6 +710,25 @@ def solve_batch(
     the per-system re-solve recorded in ``info["fallback"]``.  The
     circuit diagnostics (``stable``, ``settle_time``, error model)
     keep describing the analog attempt.
+
+    ``refine`` upgrades the binary fallback into *graded recovery*
+    (``None``/``False`` — off, the pre-existing behavior; ``True`` —
+    the default :class:`repro.core.refine.RefineSpec`; a driver name
+    ``"ir"``/``"fcg"`` or a full spec): every analog solution is
+    verified against its fp64 relative residual, rows above the
+    refinement tol run mixed-precision iterative refinement with the
+    analog circuit as the inner solve, and only stalled rows escalate
+    to ``fallback``.  The result then carries ``info["residual"]``,
+    ``info["refine_iters"]`` and ``info["precision_path"]`` (per
+    system, one of :data:`PRECISION_PATHS`).
+
+    ``sweep_dtype`` ("float32" | "bfloat16") selects the Euler settle
+    sweep's weight precision (bf16 storage / fp32 accumulate — halves
+    the dominant sweep traffic; the settling verdict then certifies
+    only a widened band, ``engine.BF16_SETTLE_RTOL``, with fp64
+    recovery delegated to ``refine``).  ``settle_x0`` ((B, n)) warm
+    starts the settle sweep from a previous solution — the session
+    warm-start path of the solve service.
     """
     return solve_batch_submit(
         a,
@@ -597,6 +750,9 @@ def solve_batch(
         max_iter=max_iter,
         fallback=fallback,
         fallback_residual_tol=fallback_residual_tol,
+        refine=refine,
+        sweep_dtype=sweep_dtype,
+        settle_x0=settle_x0,
         pattern=pattern,
         mesh=mesh,
         device=device,
@@ -625,6 +781,8 @@ def solve(
     max_iter: int = 10000,
     fallback: str = "cholesky",
     fallback_residual_tol: float = FALLBACK_RESIDUAL_TOL,
+    refine=None,
+    sweep_dtype: str = "float32",
 ) -> SolveResult:
     """Solve the SPD system ``A x = b``.
 
@@ -682,5 +840,7 @@ def solve(
         max_iter=max_iter,
         fallback=fallback,
         fallback_residual_tol=fallback_residual_tol,
+        refine=refine,
+        sweep_dtype=sweep_dtype,
     )
     return batch[0]

@@ -59,9 +59,13 @@ Accuracy contract (enforced by the CI settling-accuracy guard,
 matrices — both circuit designs, non-diagonally-dominant SPD included —
 the slow-mode estimate lands within 2x of the exact-eig reference
 (observed: within ~2% once the rightmost residual converges), and
-unstable systems are flagged by sign.  ``t_settle`` remains the
+unstable systems are flagged by sign.  ``t_settle`` defaults to the
 amplitude-blind e-folding estimate ``ln(1/rtol) / |Re lambda_slow|``;
-the exact modal path is the small-nz reference for the paper's
+when the initial error state is known (warm starts, refinement
+re-settles) :func:`amplitude_settle_steps` projects it onto the
+extracted slow subspace (``SpectralBounds.slow_basis``) and replaces
+the blind horizon with the actual slow-mode amplitude's e-fold count.
+The exact modal path is the small-nz reference for the paper's
 settling criterion.
 """
 
@@ -111,6 +115,7 @@ class SpectralBounds:
     settle_time: np.ndarray     # (B,) ln(1/rtol)/|Re slow|; inf if unstable
     settle_steps: np.ndarray    # (B,) ceil(settle_time / dt)
     certified: np.ndarray       # (B,) converged + contracting slow subspace
+    slow_basis: np.ndarray | None = None  # (B, k, nz) orthonormal slow block
 
     @property
     def stable(self) -> np.ndarray:
@@ -392,10 +397,12 @@ def slow_mode_ritz(
     until the rightmost Ritz pair's residual drops below ``res_rtol``
     relative to ``rate`` (or ``max_cycles``).
 
-    Returns ``(theta, res, fov_slow, cycles)``: the final Ritz values
-    ``(B, k)`` and residual norms, the restricted numerical abscissa
-    ``lambda_max(sym(V^T M V))`` of the slow subspace, and the cycle
-    count used.
+    Returns ``(theta, res, fov_slow, cycles, basis)``: the final Ritz
+    values ``(B, k)`` and residual norms, the restricted numerical
+    abscissa ``lambda_max(sym(V^T M V))`` of the slow subspace, the
+    cycle count used, and the final orthonormal block ``(B, k, nz)``
+    spanning the slow subspace (rows are the basis vectors — the input
+    of the amplitude projection in :func:`amplitude_settle_steps`).
     """
     k = min(block, nz)
     rate = np.maximum(np.asarray(rate, dtype=np.float64), _TINY)
@@ -420,7 +427,7 @@ def slow_mode_ritz(
     fov_slow = np.linalg.eigvalsh(
         0.5 * (b_proj + b_proj.transpose(0, 2, 1))
     )[:, -1]
-    return theta, res, fov_slow, cycles
+    return theta, res, fov_slow, cycles, np.asarray(v, dtype=np.float64)
 
 
 def lanczos_sym_extreme(matvec_sym, b: int, nz: int, iters: int = 24):
@@ -511,9 +518,10 @@ def spectral_bounds(
     slow = np.full(b, np.nan)
     slow_res = np.full(b, np.inf)
     fov_slow = None
+    basis = None
     certified = np.zeros(b, dtype=bool)
     if slow_iters:
-        theta_s, res_s, fov_slow, _cycles = slow_mode_ritz(
+        theta_s, res_s, fov_slow, _cycles, basis = slow_mode_ritz(
             mvb,
             rate,
             b,
@@ -557,4 +565,55 @@ def spectral_bounds(
         settle_time=settle,
         settle_steps=steps,
         certified=certified,
+        slow_basis=basis,
     )
+
+
+# ---------------------------------------------------------------------------
+# Amplitude-aware settling correction
+# ---------------------------------------------------------------------------
+
+
+def amplitude_settle_steps(
+    bounds: SpectralBounds,
+    z_err: np.ndarray,
+    *,
+    rtol: float = 0.01,
+    x_scale: np.ndarray | None = None,
+) -> np.ndarray:
+    """Amplitude-corrected settle-step prediction ``(B,)``.
+
+    ``SpectralBounds.settle_steps`` is amplitude-blind: it assumes the
+    initial slow-mode amplitude equals the solution scale, i.e. a cold
+    ``z0 = 0`` start (``ln(1/rtol)`` e-folds).  Given an estimate of the
+    *initial error state* ``z_err = z0 - z*`` ``(B, nz)``, this projects
+    it onto the extracted slow subspace and predicts
+    ``ceil(ln(amp_slow / (rtol * x_scale)) / (|Re lambda_slow| dt))``
+    steps instead — near zero for a warm start whose error has little
+    slow-mode content, and tighter than the blind bound whenever the
+    initial amplitude differs from the solution scale.
+
+    ``x_scale`` ``(B,)`` is the per-system magnitude the convergence
+    band is relative to (``max |x_ref|`` in the settle loop); defaults
+    to ``max |z_err|`` per system.  At least one e-fold is always
+    predicted (fast modes outside the slow subspace still need a few
+    steps to die; the settle loop's converged check — not this
+    prediction — decides actual termination, so the prediction only
+    steers ``sweep_chunk_schedule`` and the refinement stopping rule).
+    Unstable/uncertified systems keep the blind ``settle_steps``.
+    """
+    z = np.asarray(z_err, dtype=np.float64)
+    if bounds.slow_basis is None:
+        return np.asarray(bounds.settle_steps, dtype=np.float64)
+    coeff = np.einsum("bkn,bn->bk", bounds.slow_basis, z)
+    amp = np.linalg.norm(coeff, axis=1)
+    if x_scale is None:
+        x_scale = np.max(np.abs(z), axis=1)
+    tol_abs = np.maximum(np.asarray(rtol, dtype=np.float64) * x_scale, _TINY)
+    decay = np.maximum(-bounds.slow_re, _TINY) * np.asarray(bounds.dt)
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        efolds = np.log(np.maximum(amp / tol_abs, np.e))
+        steps = np.ceil(efolds / np.maximum(decay, _TINY))
+    blind = np.asarray(bounds.settle_steps, dtype=np.float64)
+    ok = bounds.stable & np.isfinite(steps)
+    return np.where(ok, steps, blind)

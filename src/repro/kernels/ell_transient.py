@@ -29,6 +29,16 @@ Both use a VPU row reduction over the slot axis (the op is a gather
 plus an FMA per slot — there is no MXU shape here) and read the slot
 arrays row-major.  Callers go through the auto-padding wrappers in
 :mod:`repro.kernels.ops`; the raw kernels assert pre-padded shapes.
+
+Both kernels take a ``sweep_dtype`` knob (``"float32"`` default, or
+``"bfloat16"``): the slot weights are stored and multiplied at that
+precision while the slot-axis *accumulation*, the state vector and the
+settling residual stay float32 (bf16 storage / fp32 accumulate — the
+mixed-precision contract the refinement layer in
+:mod:`repro.core.refine` assumes).  bf16 halves the per-step weight
+traffic — the dominant bytes of the sweep — at ~3 decimal digits of
+weight precision, which the 1 %-band settling check tolerates; anything
+tighter than the band must come from refinement, not the sweep.
 """
 
 from __future__ import annotations
@@ -42,20 +52,26 @@ from jax.experimental import pallas as pl
 
 DEFAULT_ROW_BLOCK = 128
 
+# sweep_dtype values accepted by the sweep kernels and their wrappers
+SWEEP_DTYPES = ("float32", "bfloat16")
+
 
 def _ell_residual(z_row, idx, w, c):
     """Gathered row reduction: ``(M z + c)`` for one system.
 
-    z_row: (nz,) f32; idx: (nz, K) int32; w: (nz, K) f32; c: (1, nz).
+    z_row: (nz,) f32; idx: (nz, K) int32; w: (nz, K) f32 or bf16;
+    c: (1, nz) f32.  The multiply runs at ``w.dtype``; the slot-axis
+    accumulation is always float32.
     """
-    gathered = jnp.take(z_row, idx, axis=0)            # (nz, K)
-    return jnp.sum(w * gathered, axis=1)[None, :] + c  # (1, nz)
+    gathered = jnp.take(z_row, idx, axis=0).astype(w.dtype)   # (nz, K)
+    prod = (w * gathered).astype(jnp.float32)
+    return jnp.sum(prod, axis=1)[None, :] + c                 # (1, nz)
 
 
 def _ell_sweep_kernel(idx_ref, w_ref, z_ref, c_ref, out_ref, res_ref,
-                      *, n_steps: int, dt: float):
+                      *, n_steps: int, dt: float, sweep_dtype: str):
     idx = idx_ref[0]                                   # (nz, K)
-    w = w_ref[0].astype(jnp.float32)                   # (nz, K)
+    w = w_ref[0].astype(jnp.dtype(sweep_dtype))        # (nz, K)
     c = c_ref[...].astype(jnp.float32)                 # (1, nz)
 
     def body(_, zz):
@@ -67,7 +83,9 @@ def _ell_sweep_kernel(idx_ref, w_ref, z_ref, c_ref, out_ref, res_ref,
     res_ref[...] = jnp.max(jnp.abs(dz)).reshape(1, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("n_steps", "dt", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("n_steps", "dt", "interpret", "sweep_dtype")
+)
 def ell_sweep_pallas(
     idx: jnp.ndarray,
     w: jnp.ndarray,
@@ -77,6 +95,7 @@ def ell_sweep_pallas(
     n_steps: int,
     dt: float = 1.0,
     interpret: bool = False,
+    sweep_dtype: str = "float32",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """``n_steps`` fused Euler steps per system, ELL operator VMEM-resident.
 
@@ -84,15 +103,19 @@ def ell_sweep_pallas(
     ``(B, nz)``.  Returns ``(z', res)`` with
     ``res[b, 0] = max_i |M_b z'_b + c_b|_i`` — the fused settling-check
     reduction evaluated at the final state (matching the dense sweep's
-    contract).
+    contract).  ``sweep_dtype="bfloat16"`` selects the bf16-weight /
+    fp32-accumulate variant (state and residual stay f32); pass ``w``
+    already cast to bf16 to also halve the weight traffic.
     """
     bsz, nz, k = idx.shape
     assert w.shape == idx.shape and z.shape == (bsz, nz) and c.shape == z.shape, (
         idx.shape, w.shape, z.shape, c.shape)
     assert nz % 128 == 0, idx.shape
+    assert sweep_dtype in SWEEP_DTYPES, sweep_dtype
 
     return pl.pallas_call(
-        functools.partial(_ell_sweep_kernel, n_steps=int(n_steps), dt=float(dt)),
+        functools.partial(_ell_sweep_kernel, n_steps=int(n_steps), dt=float(dt),
+                          sweep_dtype=sweep_dtype),
         grid=(bsz,),
         in_specs=[
             pl.BlockSpec((1, nz, k), lambda b: (b, 0, 0)),
@@ -113,17 +136,20 @@ def ell_sweep_pallas(
 
 
 def _ell_step_kernel(idx_ref, w_ref, zfull_ref, zi_ref, c_ref,
-                     out_ref, res_ref, *, dt: float):
+                     out_ref, res_ref, *, dt: float, sweep_dtype: str):
     idx = idx_ref[0]                                   # (bm, K)
-    w = w_ref[0].astype(jnp.float32)                   # (bm, K)
+    w = w_ref[0].astype(jnp.dtype(sweep_dtype))        # (bm, K)
     z = zfull_ref[0].astype(jnp.float32)               # (nz,) whole state
-    gathered = jnp.take(z, idx, axis=0)                # (bm, K)
-    dz = jnp.sum(w * gathered, axis=1)[None, :] + c_ref[...].astype(jnp.float32)
+    gathered = jnp.take(z, idx, axis=0).astype(w.dtype)  # (bm, K)
+    dz = jnp.sum((w * gathered).astype(jnp.float32), axis=1)[None, :] \
+        + c_ref[...].astype(jnp.float32)
     out_ref[...] = (zi_ref[...].astype(jnp.float32) + dt * dz).astype(out_ref.dtype)
     res_ref[...] = jnp.max(jnp.abs(dz)).reshape(1, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("dt", "block", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("dt", "block", "interpret", "sweep_dtype")
+)
 def ell_step_pallas(
     idx: jnp.ndarray,
     w: jnp.ndarray,
@@ -133,6 +159,7 @@ def ell_step_pallas(
     *,
     block: int = DEFAULT_ROW_BLOCK,
     interpret: bool = False,
+    sweep_dtype: str = "float32",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One row-tiled ELL Euler step: idx/w (B, nz, K), z/c (B, nz).
 
@@ -140,14 +167,17 @@ def ell_step_pallas(
     of ``|M_b z_b + c_b|`` — reduce over axis 1 for the per-system
     settling check.  Used when the whole ELL operator does not fit
     VMEM; the state vector still does, so the gather stays local.
+    ``sweep_dtype`` as in :func:`ell_sweep_pallas`.
     """
     bsz, nz, k = idx.shape
     assert w.shape == idx.shape and z.shape == (bsz, nz) and c.shape == z.shape, (
         idx.shape, w.shape, z.shape, c.shape)
     assert nz % block == 0, (idx.shape, block)
+    assert sweep_dtype in SWEEP_DTYPES, sweep_dtype
 
     return pl.pallas_call(
-        functools.partial(_ell_step_kernel, dt=float(dt)),
+        functools.partial(_ell_step_kernel, dt=float(dt),
+                          sweep_dtype=sweep_dtype),
         grid=(bsz, nz // block),
         in_specs=[
             pl.BlockSpec((1, block, k), lambda b, i: (b, i, 0)),

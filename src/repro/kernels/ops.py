@@ -189,6 +189,7 @@ def ell_transient_sweep(
     dt: float = 1.0,
     interpret: bool | None = None,
     padded: bool = False,
+    sweep_dtype: str = "float32",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """``n_steps`` fused ELL Euler steps; idx/w (B, nz, K), z/c (B, nz).
 
@@ -201,8 +202,14 @@ def ell_transient_sweep(
     ``padded=True`` asserts the caller already block-padded every
     operand — the loop-hoisted fast path for settling sweeps that
     launch many chunks over the same operator batch.
+
+    ``sweep_dtype="bfloat16"`` runs the bf16-weight / fp32-accumulate
+    kernel variant: the slot weights are cast to bf16 storage here (so
+    the per-step weight traffic halves) while the state, the slot-axis
+    accumulation and the settling residual stay float32.
     """
     interpret = _interpret_default() if interpret is None else interpret
+    assert sweep_dtype in _ell.SWEEP_DTYPES, sweep_dtype
     bsz, nz, k = idx.shape
     if not padded:
         size = nz + (-nz) % 128
@@ -210,16 +217,21 @@ def ell_transient_sweep(
         w = _pad_to(w, (1, size, 1))
         z = _pad_to(z, (1, size))
         c = _pad_to(c, (1, size))
+    if sweep_dtype == "bfloat16" and w.dtype != jnp.bfloat16:
+        w = w.astype(jnp.bfloat16)
     if ell_sweep_fits_vmem(nz, k):
         out, res = _ell.ell_sweep_pallas(
-            idx, w, z, c, n_steps=n_steps, dt=dt, interpret=interpret
+            idx, w, z, c, n_steps=n_steps, dt=dt, interpret=interpret,
+            sweep_dtype=sweep_dtype,
         )
         return out[:, :nz], res[:, 0]
     for _ in range(n_steps):
-        z, _ = _ell.ell_step_pallas(idx, w, z, c, dt, interpret=interpret)
+        z, _ = _ell.ell_step_pallas(idx, w, z, c, dt, interpret=interpret,
+                                    sweep_dtype=sweep_dtype)
     # dt=0 step: state unchanged, residual evaluated at the *final*
     # state — matching the fused kernel's contract
-    _zf, res = _ell.ell_step_pallas(idx, w, z, c, 0.0, interpret=interpret)
+    _zf, res = _ell.ell_step_pallas(idx, w, z, c, 0.0, interpret=interpret,
+                                    sweep_dtype=sweep_dtype)
     return z[:, :nz], jnp.max(res, axis=1)
 
 
@@ -232,6 +244,7 @@ def transient_sweep(
     dt: float = 1.0,
     interpret: bool | None = None,
     m_transposed: bool = False,
+    sweep_dtype: str = "float32",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """``n_steps`` fused batched Euler steps; m (B, n, n), z/c (B, n).
 
@@ -242,9 +255,19 @@ def transient_sweep(
 
     ``m_transposed=True`` asserts the caller already block-padded every
     operand and passed ``m[b] = M_b.T`` — the loop-hoisted fast path for
-    sweeps that launch many chunks over the same operator batch.
+    sweeps that launch many chunks over the same operator batch (that
+    path expects the caller to have applied ``sweep_dtype`` rounding to
+    ``m`` once, outside the chunk loop).
+
+    ``sweep_dtype="bfloat16"`` rounds the dense operator through bf16
+    before the f32 sweep — the same storage-precision semantics as the
+    ELL bf16 kernels (the dense MXU kernels accumulate in f32 either
+    way, so rounding the weights is the entire dtype effect).
     """
     interpret = _interpret_default() if interpret is None else interpret
+    assert sweep_dtype in _ell.SWEEP_DTYPES, sweep_dtype
+    if sweep_dtype == "bfloat16" and not m_transposed:
+        m = m.astype(jnp.bfloat16).astype(jnp.float32)
     bsz, n, _ = m.shape
     if m_transposed:
         out, res = _st.transient_sweep_pallas(

@@ -45,6 +45,11 @@ import numpy as np
 #   nonfinite        — the delivered solution carried NaN/Inf
 #   uncertified      — settling never certified AND the residual
 #                      overflowed, with digital fallback disabled
+#   unrefined        — graded recovery was enabled, refinement stalled /
+#                      exhausted its budget AND digital fallback was
+#                      disabled: the residual-verified precision
+#                      contract cannot be met (deterministic — never
+#                      retried)
 #   deadline_expired — the ticket's deadline passed before dispatch
 #   poison           — the request's own host build raised repeatedly
 #   shed             — dropped by queue-depth load shedding (lowest
@@ -53,6 +58,7 @@ ERROR_KINDS = (
     "device_fault",
     "nonfinite",
     "uncertified",
+    "unrefined",
     "deadline_expired",
     "poison",
     "shed",

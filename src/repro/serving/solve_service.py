@@ -80,9 +80,11 @@ any single-fault model**.  The machinery behind that contract:
   ``kind`` one of ``device_fault`` (the stream's solve raised),
   ``nonfinite`` (the delivered solution carried NaN/Inf),
   ``uncertified`` (settling never certified and the residual
-  overflowed, with digital fallback disabled), ``deadline_expired``,
-  ``poison`` (the request's own host build raises repeatedly), and
-  ``shed`` (queue-depth load shedding).
+  overflowed, with digital fallback disabled), ``unrefined`` (graded
+  recovery stalled with digital fallback disabled — the precision
+  contract cannot be met), ``deadline_expired``, ``poison`` (the
+  request's own host build raises repeatedly), and ``shed``
+  (queue-depth load shedding).
 * **bounded retry + poison bisection** — a failing micro-batch of more
   than one ticket is *bisected*: both halves re-dispatch, so a single
   poison request is isolated in ``log2(batch_slots)`` extra dispatches
@@ -109,7 +111,20 @@ any single-fault model**.  The machinery behind that contract:
   uncertified one whose residual overflows) re-solves digitally inside
   :func:`repro.core.solver.solve_batch` (``fallback="cholesky"``
   default), recorded per system as ``info["fallback"]`` and counted in
-  ``stats["fallbacks"]``.
+  ``stats["fallbacks"]`` (``stats["fallbacks_injected"]`` when the
+  micro-batch's dispatch carried injected corruption — the two are
+  split so chaos runs cannot hide numerical regressions).
+* **precision paths (graded recovery)** — with ``refine=`` enabled the
+  binary fallback becomes verify → refine → fall back: every delivered
+  solution carries ``info["residual"]`` (fp64 relative),
+  ``info["refine_iters"]`` and ``info["precision_path"]`` — ``analog``
+  (raw solve already within the refinement tol), ``refined``
+  (mixed-precision iterative refinement converged, see
+  :mod:`repro.core.refine`), or ``fallback`` (refinement stalled, a
+  digital re-solve delivered).  With ``fallback="none"`` a stalled row
+  is instead failed fast as ``unrefined`` — deterministic, never
+  retried.  ``stats["precision_paths"]`` /
+  ``stats["refine_iters_total"]`` aggregate the contract per stream.
 * **fault injection** — the chaos hook: pass a seeded
   :class:`~repro.serving.faults.FaultInjector` as ``fault_injector``
   and the service injects device faults, NaN solutions, host build
@@ -182,16 +197,19 @@ import numpy as np
 
 from repro.core import engine
 from repro.core.operating_point import NonIdealities
+from repro.core.refine import as_refine_spec
 from repro.core.solver import (
     ANALOG_METHODS,
     DIGITAL_METHODS,
     FALLBACK_METHODS,
     FALLBACK_RESIDUAL_TOL,
+    PRECISION_PATHS,
     PendingBatchSolve,
     SolveResult,
     _build_nets,
     solve_batch_submit,
 )
+from repro.kernels.ell_transient import SWEEP_DTYPES
 from repro.core.specs import DEFAULT_PARAMS, OPAMPS, CircuitParams, OpAmpSpec
 from repro.serving.engine import AdmissionQueue
 from repro.serving.faults import (
@@ -230,6 +248,7 @@ class SolveSignature:
     settle_method: str = "auto"
     settle_max_steps: int = 200_000
     settle_dt_policy: str = "diag"
+    sweep_dtype: str = "float32"
     tol: float = 1e-10
     max_iter: int = 10000
     nonideal: NonIdealities | None = None
@@ -255,9 +274,11 @@ class SolveSignature:
                 # the preliminary builder takes only (a, b, params)
                 changes.update(d_policy="proposed", beta=0.5, alpha=1.0)
         if not (self.compute_settling and self.method in ANALOG_METHODS):
+            # sweep_dtype only selects the settle sweep kernel, so it is
+            # solver-irrelevant (and must not split buckets) without one
             changes.update(
                 settle_method="auto", settle_max_steps=200_000,
-                settle_dt_policy="diag",
+                settle_dt_policy="diag", sweep_dtype="float32",
             )
         return dataclasses.replace(self, **changes)
 
@@ -272,6 +293,10 @@ class SolveTicket:
     a: np.ndarray
     b: np.ndarray
     sig: SolveSignature
+    # optional settle warm start (previous solution, (n,)) — a per-ticket
+    # payload, NOT part of the bucket signature: cold and warm tickets
+    # share micro-batches (a cold row just gets the zero initial state)
+    x0: np.ndarray | None = None
     result: SolveResult | SolveError | None = None
     # failed dispatch/harvest count (bounded by max_attempts)
     attempts: int = 0
@@ -307,6 +332,10 @@ class _InFlight:
     tickets: list
     pending: PendingBatchSolve
     dev: int
+    # the fault kind the chaos injector planted into this dispatch (None
+    # for a clean one) — lets delivery accounting attribute corruption-
+    # driven recovery to the injector instead of the numerics
+    injected: str | None = None
 
 
 def pad_system(
@@ -384,6 +413,17 @@ class SolveService:
         non-finite result retries (it may be transient) and an
         uncertified-with-residual-overflow one fails fast as
         ``uncertified`` (it is deterministic — retrying cannot help).
+    refine:
+        The graded-recovery policy (``None``/``False`` — off, ``True``
+        — the default :class:`repro.core.refine.RefineSpec`, a driver
+        name or a full spec), forwarded to
+        :func:`repro.core.solver.solve_batch_submit` for every analog
+        micro-batch.  Enabled, every delivered solution carries the
+        per-ticket precision contract — ``info["residual"]`` (fp64
+        relative), ``info["refine_iters"]`` and
+        ``info["precision_path"]`` — and a ticket whose refinement
+        stalls with ``fallback="none"`` fails fast as ``unrefined``
+        (deterministic, like ``uncertified``).
     breaker_threshold / breaker_backoff_s / breaker_backoff_max_s:
         The per-stream circuit breaker: consecutive device-side
         failures before a stream is quarantined, and its
@@ -409,6 +449,7 @@ class SolveService:
         max_queue_depth: int | None = None,
         fallback: str = "cholesky",
         fallback_residual_tol: float = FALLBACK_RESIDUAL_TOL,
+        refine=None,
         breaker_threshold: int = 3,
         breaker_backoff_s: float = 0.25,
         breaker_backoff_max_s: float = 30.0,
@@ -440,6 +481,7 @@ class SolveService:
         )
         self.fallback = fallback
         self.fallback_residual_tol = float(fallback_residual_tol)
+        self.refine = as_refine_spec(refine)
         self.fault_injector = fault_injector
         self.breaker = StreamBreaker(
             len(self.devices),
@@ -463,6 +505,12 @@ class SolveService:
             "shed": 0,
             "deadline_expired": 0,
             "fallbacks": 0,
+            # fallbacks in micro-batches whose dispatch carried an
+            # injected corruption — attributed to the injector, so the
+            # genuine "fallbacks" counter stays a clean numerics signal
+            "fallbacks_injected": 0,
+            "refine_iters_total": 0,
+            "precision_paths": {k: 0 for k in PRECISION_PATHS},
             "quarantines": 0,
             "requeued_on_quarantine": 0,
             "errors": {k: 0 for k in ERROR_KINDS},
@@ -512,8 +560,10 @@ class SolveService:
         settle_method: str = "auto",
         settle_max_steps: int = 200_000,
         settle_dt_policy: str = "diag",
+        sweep_dtype: str = "float32",
         tol: float = 1e-10,
         max_iter: int = 10000,
+        x0=None,
         priority: int = 0,
         deadline: float | None = None,
     ) -> int:
@@ -524,11 +574,31 @@ class SolveService:
         and stamps the admission order (``priority`` admits first,
         earliest ``deadline`` within a priority class, FIFO on ties —
         see :func:`repro.serving.engine.admission_key`).
+
+        ``sweep_dtype`` ("float32" | "bfloat16") selects the settle
+        sweep kernel precision (signature-relevant only with
+        ``compute_settling`` on an analog method).  ``x0`` ((n,)) warm
+        starts the settle sweep from a previous solution — a per-ticket
+        payload that does not affect bucketing (the
+        :class:`SolveSession` warm-start path).
         """
         a = np.asarray(a, dtype=np.float64)
         b = np.asarray(b, dtype=np.float64)
         if a.ndim != 2 or a.shape[0] != a.shape[1] or b.shape != (a.shape[0],):
             raise ValueError(f"expected (n, n) and (n,); got {a.shape}, {b.shape}")
+        if sweep_dtype not in SWEEP_DTYPES:
+            raise ValueError(
+                f"unknown sweep_dtype {sweep_dtype!r}: expected one of "
+                f"{SWEEP_DTYPES}"
+            )
+        if x0 is not None:
+            x0 = np.asarray(x0, dtype=np.float64)
+            if x0.shape != b.shape or not np.isfinite(x0).all():
+                # a malformed warm start must not poison the sweep —
+                # reject at submit time, where the caller can see it
+                raise ValueError(
+                    f"x0 must be a finite ({a.shape[0]},) array"
+                )
         if method not in ANALOG_METHODS + DIGITAL_METHODS:
             raise ValueError(
                 f"unknown method {method!r}: expected one of "
@@ -548,6 +618,7 @@ class SolveService:
             settle_method=settle_method,
             settle_max_steps=settle_max_steps,
             settle_dt_policy=settle_dt_policy,
+            sweep_dtype=sweep_dtype,
             tol=tol,
             max_iter=max_iter,
             nonideal=nonideal,
@@ -555,7 +626,7 @@ class SolveService:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.push(
-            SolveTicket(rid=rid, a=a, b=b, sig=sig),
+            SolveTicket(rid=rid, a=a, b=b, sig=sig, x0=x0),
             priority=priority, deadline=deadline,
         )
         return rid
@@ -633,6 +704,23 @@ class SolveService:
             a_stack = np.stack([p[0] for p in padded])
             b_stack = np.stack([p[1] for p in padded])
 
+            settle_x0 = None
+            if sig.method in ANALOG_METHODS and any(
+                t.x0 is not None for t in tickets
+            ):
+                # warm-start stack: a cold ticket's row is the zero
+                # initial state (identical to no-x0 dispatch); warm pad
+                # entries sit at the known pad solution
+                rows = []
+                for t in tickets:
+                    row = np.zeros(pipe.n_pad, dtype=np.float64)
+                    if t.x0 is not None:
+                        row[: t.n] = t.x0
+                        row[t.n:] = PAD_SOLUTION_V
+                    rows.append(row)
+                rows += [rows[-1]] * fill
+                settle_x0 = np.stack(rows)
+
             pattern, nets = self._bucket_pattern(pipe, a_stack, b_stack)
             pending = solve_batch_submit(
                 a_stack,
@@ -652,6 +740,9 @@ class SolveService:
                 max_iter=sig.max_iter,
                 fallback=self.fallback,
                 fallback_residual_tol=self.fallback_residual_tol,
+                refine=self.refine,
+                sweep_dtype=sig.sweep_dtype,
+                settle_x0=settle_x0,
                 pattern=pattern,
                 device=self.devices[dev],
             )
@@ -662,10 +753,13 @@ class SolveService:
         pipe.micro_batches += 1
         pipe.systems += n_real
         pipe.fill_slots += fill
-        return _InFlight(pipe=pipe, tickets=tickets, pending=pending, dev=dev)
+        return _InFlight(
+            pipe=pipe, tickets=tickets, pending=pending, dev=dev,
+            injected=fault,
+        )
 
     def _unpack_micro_batch(
-        self, pipe, tickets, batch
+        self, pipe, tickets, batch, injected: str | None = None
     ) -> list[tuple[SolveTicket, str, str]]:
         """Materialize per-ticket results from one harvested micro-batch.
 
@@ -683,8 +777,15 @@ class SolveService:
         corruption may be transient).  An uncertified settling result
         whose residual overflows with digital fallback disabled is
         returned as ``("uncertified", ...)`` — deterministic, so the
-        caller fails it fast.  Everything else is delivered, with
-        per-system digital fallbacks counted.
+        caller fails it fast; likewise a ``precision_path ==
+        "unrefined"`` system (graded recovery stalled with fallback
+        disabled) is returned as ``("unrefined", ...)``.  Everything
+        else is delivered, with per-system digital fallbacks counted —
+        attributed to ``fallbacks_injected`` instead of ``fallbacks``
+        when this micro-batch's dispatch carried an ``injected``
+        corruption, so chaos runs cannot mask genuine numerical
+        regressions — and the precision-path / refine-iteration
+        counters updated for every delivered solution.
         """
         n_real = len(tickets)
         xs = np.asarray(batch.x)
@@ -712,6 +813,15 @@ class SolveService:
             if not np.isfinite(x).all():
                 bad.append((ticket, "nonfinite", "solution carried NaN/Inf"))
                 continue
+            if info.get("precision_path") == "unrefined":
+                rel = info.get("residual", float("nan"))
+                bad.append((
+                    ticket, "unrefined",
+                    f"refinement stalled at rel residual {rel:.3e} "
+                    f"after {info.get('refine_iters', 0)} inner solve(s), "
+                    "fallback disabled",
+                ))
+                continue
             if info.get("settle_certified") is False:
                 r = ticket.a @ x - ticket.b
                 rel = float(
@@ -725,7 +835,17 @@ class SolveService:
                     ))
                     continue
             if info.get("fallback"):
-                self._counters["fallbacks"] += 1
+                key = (
+                    "fallbacks_injected" if injected == "nonfinite"
+                    else "fallbacks"
+                )
+                self._counters[key] += 1
+            path = info.get("precision_path")
+            if path is not None:
+                self._counters["precision_paths"][path] += 1
+                self._counters["refine_iters_total"] += int(
+                    info.get("refine_iters", 0)
+                )
             info["service_n_padded"] = pipe.n_pad
             info["service_batch_slots"] = self.batch_slots
             ticket.result = SolveResult(
@@ -882,7 +1002,9 @@ class SolveService:
         """Delivery acceptance for one harvested micro-batch: unpack,
         hand out terminal answers, route rejected tickets to retry."""
         t_unpack = time.perf_counter()
-        bad = self._unpack_micro_batch(flight.pipe, flight.tickets, batch)
+        bad = self._unpack_micro_batch(
+            flight.pipe, flight.tickets, batch, injected=flight.injected
+        )
         self._unpack_s += time.perf_counter() - t_unpack
         for t in flight.tickets:
             if t.result is not None:
@@ -890,8 +1012,12 @@ class SolveService:
         retry: list[SolveTicket] = []
         for ticket, kind, detail in bad:
             ticket.attempts += 1
-            if kind == "uncertified" or ticket.attempts >= self.max_attempts:
-                # uncertified is deterministic — retrying cannot help
+            if (
+                kind in ("uncertified", "unrefined")
+                or ticket.attempts >= self.max_attempts
+            ):
+                # uncertified/unrefined are deterministic — retrying
+                # cannot help
                 self._fail(ticket, kind, detail, out)
             else:
                 self._counters["retries"] += 1
@@ -1057,8 +1183,20 @@ class SolveService:
         ``deadline_expired`` (admission-time rejections),
         ``quarantines`` / ``requeued_on_quarantine`` + the ``breaker``
         snapshot (stream health), ``fallbacks`` (per-system
-        analog→digital re-solves), terminal ``errors`` per kind, and
-        ``fault_injections`` when a chaos injector is armed.
+        analog→digital re-solves on clean dispatches — the genuine
+        numerics signal) vs ``fallbacks_injected`` (re-solves inside
+        micro-batches whose dispatch carried injected corruption,
+        attributed to the chaos injector), terminal ``errors`` per
+        kind, and ``fault_injections`` when a chaos injector is armed.
+
+        With graded recovery enabled (``refine=``), the precision
+        contract rides along too: ``precision_paths`` counts delivered
+        solutions per route (``analog`` — the raw solve already met the
+        refinement tol; ``refined`` — iterative refinement converged;
+        ``fallback`` — refinement stalled and a digital re-solve
+        delivered; ``unrefined`` never appears here, it is a terminal
+        error kind) and ``refine_iters_total`` the inner analog solves
+        consumed — the hardware-quality readout of the stream.
         """
         per_bucket = {}
         pad_sq = 0.0
@@ -1099,6 +1237,9 @@ class SolveService:
             "shed": c["shed"],
             "deadline_expired": c["deadline_expired"],
             "fallbacks": c["fallbacks"],
+            "fallbacks_injected": c["fallbacks_injected"],
+            "refine_iters_total": c["refine_iters_total"],
+            "precision_paths": dict(c["precision_paths"]),
             "quarantines": c["quarantines"],
             "requeued_on_quarantine": c["requeued_on_quarantine"],
             "errors": dict(c["errors"]),
@@ -1157,9 +1298,23 @@ class SolveSession:
     options: ``method``, ``opamp``, ``nonideal``, ``d_policy``,
     ``beta``, ``alpha``, ``tol``, ``max_iter`` — forwarded verbatim to
     :meth:`SolveService.submit` — plus ``priority`` (admission class of
-    every round ticket) and ``round_deadline_s`` (per-round latency
+    every round ticket), ``round_deadline_s`` (per-round latency
     budget, enforced as an absolute deadline stamped at round
-    submission).
+    submission), and ``warm_start``.
+
+    ``warm_start=True`` reuses the previous round's solutions as the
+    next round's settle warm start (``x0`` per ticket): a Newton
+    client's consecutive linearized systems differ by one damped step,
+    so the previous DC state already sits near the new fixed point and
+    the amplitude-aware chunk schedule
+    (:func:`repro.core.spectral.amplitude_settle_steps`) charges only
+    the remaining error amplitude.  Rounds must keep the same ``(B,
+    n)`` shape to chain (a shape change just cold-starts that round),
+    and a round with terminal failures never seeds the next (NaN rows
+    must not poison a sweep).  ``settle_steps_by_round`` records the
+    per-round mean settle steps (None for rounds without settle-step
+    metrics) — the saved-sweep-steps measurement; ``warm_submits``
+    counts tickets that actually carried an ``x0``.
     """
 
     def __init__(
@@ -1168,6 +1323,7 @@ class SolveSession:
         *,
         priority: int = 0,
         round_deadline_s: float | None = None,
+        warm_start: bool = False,
         **submit_opts,
     ):
         self.service = service
@@ -1175,9 +1331,15 @@ class SolveSession:
         self.round_deadline_s = (
             None if round_deadline_s is None else float(round_deadline_s)
         )
+        self.warm_start = bool(warm_start)
         self.submit_opts = submit_opts
         self.rounds = 0              # rounds completed (or failed terminally)
         self.systems = 0             # tickets submitted across rounds
+        self.warm_submits = 0        # tickets submitted with a warm start
+        # per-round mean settle steps (None when the round carried no
+        # settle-step metrics) — the warm-start savings measurement
+        self.settle_steps_by_round: list[float | None] = []
+        self._last_x: np.ndarray | None = None
         # interleaved one-shot traffic answered by this session's drains
         self.other_results: dict[int, SolveResult | SolveError] = {}
 
@@ -1216,28 +1378,48 @@ class SolveSession:
             None if self.round_deadline_s is None
             else self.service.now() + self.round_deadline_s
         )
+        warm = (
+            self.warm_start
+            and self._last_x is not None
+            and self._last_x.shape == b.shape
+        )
         rids = [
             self.service.submit(
                 a[k], b[k],
+                x0=self._last_x[k] if warm else None,
                 priority=self.priority, deadline=deadline,
                 **self.submit_opts,
             )
             for k in range(a.shape[0])
         ]
+        if warm:
+            self.warm_submits += len(rids)
         out = self.service.drain()
         x = np.full_like(b, np.nan)
         errors: dict[int, SolveError] = {}
+        steps: list[float] = []
         for k, rid in enumerate(rids):
             res = out.pop(rid)
             if isinstance(res, SolveError):
                 errors[k] = res
             else:
                 x[k] = res.x
+                s = res.info.get("settle_steps")
+                if s is not None:
+                    steps.append(float(s))
+        self.settle_steps_by_round.append(
+            float(np.mean(steps)) if steps else None
+        )
         # answers for tickets other clients queued on the same service
         self.other_results.update(out)
         index = self.rounds
         self.rounds += 1
         self.systems += len(rids)
         if errors:
+            # a partial round never seeds a warm start: NaN rows would
+            # poison the next sweep's initial state
+            self._last_x = None
             raise SessionRoundError(index, errors, x)
+        if self.warm_start:
+            self._last_x = x
         return x
