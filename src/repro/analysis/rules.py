@@ -1,0 +1,657 @@
+"""Repo-specific JAX-discipline rules.
+
+Each rule encodes one invariant the serving stack has already broken at
+least once (or nearly so) — see ``docs/ANALYSIS.md`` for the catalog
+with the incident history.  Static analysis is approximate by nature:
+every rule documents its blind spots, and the runtime contract gates
+(:mod:`repro.analysis.runtime`) make the two load-bearing claims —
+steady-state no-recompile, dispatch-loop no-host-sync — falsifiable at
+run time.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import (
+    FileContext,
+    Finding,
+    Rule,
+    calls_in,
+    dotted_name,
+    loops_in,
+    walk_functions,
+)
+
+# conversions that force a host materialization of a device value
+_SYNC_METHODS = ("item", "tolist", "block_until_ready")
+_SYNC_CALLS = (
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "jax.device_get",
+)
+
+
+class HostSyncInHotPath(Rule):
+    """``.item()`` / ``float()`` / ``np.asarray`` on device values
+    inside serving dispatch and drain loops.
+
+    The dispatch side of the stream loop must never block on a device
+    value: the whole overlap model (host builds micro-batch ``i+1``
+    while the device solves ``i``) collapses if it does.  Host
+    materialization is confined to the harvest/unpack helpers, which
+    run *after* the deliberate ``wait_dc()``/``wait()`` sync.  The rule
+    flags direct sync calls inside ``for``/``while`` bodies of the
+    configured hot functions; indirect syncs (through helper calls) are
+    the runtime gate's job.
+    """
+
+    name = "host-sync-in-hot-path"
+    severity = "error"
+    description = "host sync inside a serving dispatch/drain loop"
+    default_options = {
+        "modules": ("serving/",),
+        "hot_functions": (
+            "drain", "_next_stream", "_dispatch_micro_batch",
+            "_admit", "step", "run",
+        ),
+    }
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.matches(self.options["modules"]):
+            return
+        hot = set(self.options["hot_functions"])
+        for func, _stack in walk_functions(ctx.tree):
+            if func.name not in hot:
+                continue
+            for loop in loops_in(func):
+                for call in calls_in(loop):
+                    name = dotted_name(call.func)
+                    if name is None:
+                        continue
+                    leaf = name.rsplit(".", 1)[-1]
+                    if name in _SYNC_CALLS or (
+                        "." in name and leaf in _SYNC_METHODS
+                    ):
+                        yield self.finding(
+                            ctx, call,
+                            f"{name}() forces a host sync inside the "
+                            f"{func.name}() loop — materialize after "
+                            "harvest, not in the dispatch path",
+                        )
+                    elif name == "float" and call.args and not isinstance(
+                        call.args[0], ast.Constant
+                    ):
+                        yield self.finding(
+                            ctx, call,
+                            f"float() on a computed value inside the "
+                            f"{func.name}() loop blocks if the operand "
+                            "is a device array",
+                        )
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    """jax.jit(...) or functools.partial(jax.jit, ...)."""
+    name = dotted_name(call.func)
+    if name in ("jax.jit", "jit"):
+        return True
+    if name in ("functools.partial", "partial") and call.args:
+        return dotted_name(call.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _jit_static_kwargs(call: ast.Call) -> list[ast.keyword]:
+    return [
+        kw for kw in call.keywords
+        if kw.arg in ("static_argnums", "static_argnames")
+    ]
+
+
+def _jit_decorated(func: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in func.decorator_list:
+        if isinstance(dec, ast.Call) and _is_jit_call(dec):
+            return True
+        if dotted_name(dec) in ("jax.jit", "jit"):
+            return True
+    return False
+
+
+_UNHASHABLE_DEFAULTS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                        ast.DictComp, ast.SetComp)
+
+
+class RecompileHazard(Rule):
+    """Patterns that retrigger jit lowering in steady state.
+
+    Three sub-checks:
+
+    * **jit-in-call-path** — ``jax.jit(...)`` (or a jit partial)
+      invoked inside a function body: every call builds a fresh
+      callable with an empty compile cache.  Module scope and
+      ``__init__`` (compile-once-per-instance) are exempt.
+    * **unhashable static arg** — ``static_argnums``/``static_argnames``
+      naming a parameter whose default is a list/dict/set: the cache
+      key raises (or worse, is rebuilt per call) instead of hitting.
+    * **traced-value branch** — ``if``/``while`` tests calling
+      ``float``/``int``/``bool`` inside a jit-decorated function:
+      value-dependent Python control flow either fails to trace or
+      bakes the value into the executable, recompiling per value.
+    """
+
+    name = "recompile-hazard"
+    severity = "error"
+    description = "jit cache-defeating pattern in steady-state code"
+    default_options = {
+        "modules": ("core/engine.py", "kernels/", "serving/"),
+        "allowed_functions": ("__init__",),
+    }
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.matches(self.options["modules"]):
+            return
+        allowed = set(self.options["allowed_functions"])
+
+        # unhashable static args need the wrapped defs' signatures
+        defs: dict[str, ast.FunctionDef] = {
+            f.name: f for f, _ in walk_functions(ctx.tree)
+        }
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and _is_jit_call(node):
+                yield from self._check_static_args(ctx, node, defs)
+        for func, _stack in walk_functions(ctx.tree):
+            if func.name not in allowed:
+                # a decorator's jit call belongs to the def, not to the
+                # enclosing body — it runs once at definition time
+                decorator_calls = {
+                    id(n) for dec in func.decorator_list
+                    for n in ast.walk(dec)
+                }
+                for call in calls_in(func):
+                    if id(call) in decorator_calls:
+                        continue
+                    if _is_jit_call(call):
+                        yield self.finding(
+                            ctx, call,
+                            f"jax.jit inside {func.name}() builds a fresh "
+                            "compile cache per call — hoist to module "
+                            "scope or construct once in __init__",
+                        )
+            if _jit_decorated(func):
+                yield from self._check_traced_branches(ctx, func)
+
+    def _check_static_args(self, ctx, call, defs) -> Iterator[Finding]:
+        statics = _jit_static_kwargs(call)
+        if not statics:
+            return
+        # resolve the wrapped function: jax.jit(f, ...) or
+        # @partial(jax.jit, ...) decorating f
+        target: ast.FunctionDef | None = None
+        if call.args and isinstance(call.args[0], ast.Name):
+            target = defs.get(call.args[0].id)
+        if target is None:
+            for f in defs.values():
+                for dec in f.decorator_list:
+                    if dec is call:
+                        target = f
+        if target is None:
+            return
+        args = target.args
+        params = args.posonlyargs + args.args + args.kwonlyargs
+        defaults = dict(
+            zip([a.arg for a in reversed(args.posonlyargs + args.args)],
+                list(reversed(args.defaults)))
+        )
+        defaults.update(
+            (a.arg, d) for a, d in zip(args.kwonlyargs, args.kw_defaults)
+            if d is not None
+        )
+        named: set[str] = set()
+        for kw in statics:
+            if kw.arg == "static_argnames" and isinstance(
+                kw.value, (ast.Tuple, ast.List)
+            ):
+                named |= {
+                    e.value for e in kw.value.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                }
+            elif kw.arg == "static_argnames" and isinstance(
+                kw.value, ast.Constant
+            ):
+                named.add(kw.value.value)
+            elif kw.arg == "static_argnums" and isinstance(
+                kw.value, (ast.Tuple, ast.List)
+            ):
+                for e in kw.value.elts:
+                    if (isinstance(e, ast.Constant)
+                            and isinstance(e.value, int)
+                            and e.value < len(params)):
+                        named.add(params[e.value].arg)
+        for pname in sorted(named):
+            default = defaults.get(pname)
+            if isinstance(default, _UNHASHABLE_DEFAULTS):
+                yield self.finding(
+                    ctx, call,
+                    f"static arg {pname!r} of {target.name}() defaults to "
+                    "an unhashable value — the jit cache key raises "
+                    "TypeError instead of hitting",
+                )
+
+    def _check_traced_branches(self, ctx, func) -> Iterator[Finding]:
+        for node in ast.walk(func):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            for call in calls_in(node.test):
+                if dotted_name(call.func) in ("float", "int", "bool"):
+                    yield self.finding(
+                        ctx, call,
+                        f"{dotted_name(call.func)}() in a branch test "
+                        f"inside jitted {func.name}() concretizes a "
+                        "traced value — recompiles (or fails) per value",
+                    )
+
+
+_NARROW_DTYPES = ("float32", "bfloat16", "float16")
+
+
+class DtypeContract(Rule):
+    """Precision-boundary violations on the solve path.
+
+    The solve path is fp64 end to end (``repro.core`` enables x64);
+    only the Pallas settle sweep drops precision, and bf16 exists
+    solely as *storage* inside the sweep kernels with f32 accumulation
+    (``sweep_dtype`` boundary).  Two sub-checks:
+
+    * **bf16-escape** — ``.astype(...bfloat16...)`` outside ``kernels/``
+      and the declared boundary functions.
+    * **x64-narrowing** — ``dtype=float32/16`` array construction or
+      ``.astype`` narrowing inside the declared x64 modules (the
+      direct-solve / refinement layers, where every bit is load-
+      bearing), outside the boundary functions.
+    """
+
+    name = "dtype-contract"
+    severity = "error"
+    description = "precision narrowing outside the sweep_dtype boundary"
+    default_options = {
+        "modules": ("core/", "serving/", "kernels/"),
+        # the sanctioned low-precision zone: the kernels package plus
+        # the engine functions that feed it
+        "boundary_modules": ("kernels/",),
+        "boundary_functions": (
+            "euler_settle_batch", "ell_transient_sweep", "transient_sweep",
+        ),
+        # modules with the strict everything-fp64 contract
+        "x64_modules": (
+            "core/solver.py", "core/operating_point.py", "core/refine.py",
+            "core/transform.py",
+        ),
+    }
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.matches(self.options["modules"]):
+            return
+        in_boundary_module = ctx.matches(self.options["boundary_modules"])
+        strict_x64 = ctx.matches(self.options["x64_modules"])
+        boundary_funcs = set(self.options["boundary_functions"])
+
+        spans: list[tuple[int, int]] = []
+        for func, _stack in walk_functions(ctx.tree):
+            if func.name in boundary_funcs:
+                spans.append((func.lineno, func.end_lineno or func.lineno))
+
+        def in_boundary(node: ast.AST) -> bool:
+            line = getattr(node, "lineno", 0)
+            return any(lo <= line <= hi for lo, hi in spans)
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            is_astype = (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype"
+            )
+            if is_astype and node.args:
+                dt = self._dtype_of(node.args[0])
+                if dt == "bfloat16" and not (
+                    in_boundary_module or in_boundary(node)
+                ):
+                    yield self.finding(
+                        ctx, node,
+                        "bf16 cast outside the sweep_dtype boundary — "
+                        "bf16 is kernel storage only, with f32 "
+                        "accumulation inside the sweep",
+                    )
+                elif (
+                    strict_x64 and dt in _NARROW_DTYPES
+                    and not in_boundary(node)
+                ):
+                    yield self.finding(
+                        ctx, node,
+                        f"{dt} cast in an x64 solve module — the direct/"
+                        "refinement path is fp64 end to end",
+                    )
+            elif strict_x64 and not in_boundary(node):
+                for kw in node.keywords:
+                    if kw.arg == "dtype":
+                        dt = self._dtype_of(kw.value)
+                        if dt in _NARROW_DTYPES:
+                            yield self.finding(
+                                ctx, node,
+                                f"dtype={dt} construction in an x64 solve "
+                                "module — the direct/refinement path is "
+                                "fp64 end to end",
+                            )
+
+    @staticmethod
+    def _dtype_of(node: ast.AST) -> str | None:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return node.value
+        name = dotted_name(node)
+        if name is None:
+            return None
+        return name.rsplit(".", 1)[-1]
+
+
+class DonationAfterUse(Rule):
+    """Reading a buffer after passing it to a donating jit.
+
+    ``donate_argnums`` lets XLA alias the operand allocation into the
+    result; the Python-side array is invalidated, and a later read
+    raises (GPU/TPU) or silently reads garbage.  The rule tracks
+    module-level names bound to ``jax.jit(..., donate_argnums=...)``
+    and flags any donated positional argument whose name is read again
+    later in the calling function.
+    """
+
+    name = "donation-after-use"
+    severity = "error"
+    description = "buffer read after donation to a donating jit"
+    default_options = {"modules": ("core/", "serving/", "kernels/")}
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.matches(self.options["modules"]):
+            return
+        donators: dict[str, tuple[int, ...]] = {}
+        for node in ctx.tree.body:
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            call = node.value
+            if not (isinstance(call, ast.Call) and _is_jit_call(call)):
+                continue
+            for kw in call.keywords:
+                if kw.arg == "donate_argnums" and isinstance(
+                    kw.value, (ast.Tuple, ast.List)
+                ):
+                    nums = tuple(
+                        e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                    )
+                    donators[node.targets[0].id] = nums
+        if not donators:
+            return
+        for func, _stack in walk_functions(ctx.tree):
+            # a donating call in a `return` expression ends its path —
+            # any later read belongs to a branch where it never ran
+            returned_calls = {
+                id(n)
+                for stmt in ast.walk(func)
+                if isinstance(stmt, ast.Return) and stmt.value is not None
+                for n in ast.walk(stmt.value)
+            }
+            for call in calls_in(func):
+                name = dotted_name(call.func)
+                if name not in donators or id(call) in returned_calls:
+                    continue
+                donated = {
+                    call.args[i].id
+                    for i in donators[name]
+                    if i < len(call.args) and isinstance(call.args[i], ast.Name)
+                }
+                if not donated:
+                    continue
+                # a re-binding revives the name: stop tracking it there
+                rebind_line = {d: None for d in donated}
+                for n in ast.walk(func):
+                    if (isinstance(n, ast.Name)
+                            and isinstance(n.ctx, ast.Store)
+                            and n.id in donated
+                            and n.lineno > call.lineno):
+                        prev = rebind_line[n.id]
+                        if prev is None or n.lineno < prev:
+                            rebind_line[n.id] = n.lineno
+                for later in ast.walk(func):
+                    if not (
+                        isinstance(later, ast.Name)
+                        and isinstance(later.ctx, ast.Load)
+                        and later.id in donated
+                        and later.lineno > call.lineno
+                    ):
+                        continue
+                    rebound = rebind_line[later.id]
+                    if rebound is not None and later.lineno >= rebound:
+                        continue
+                    yield self.finding(
+                        ctx, later,
+                        f"{later.id!r} is read after being donated to "
+                        f"{name}() — the buffer may already be "
+                        "aliased into the result",
+                    )
+
+
+_MUTATING_METHODS = (
+    "append", "appendleft", "extend", "pop", "popleft", "clear",
+    "remove", "add", "update", "insert", "setdefault",
+)
+
+
+def _self_root(node: ast.AST) -> bool:
+    """Whether an attribute/subscript chain is rooted at ``self``."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id == "self"
+
+
+class UnlockedSharedState(Rule):
+    """Un-locked mutation of state shared across per-device streams.
+
+    ``AdmissionQueue``, ``StreamBreaker`` and ``FaultInjector`` are
+    reachable from every stream's dispatch/harvest path; the ROADMAP's
+    per-stream host threads make their mutations races the day they
+    land.  Mutating methods of the configured classes must run under
+    ``with self._lock:`` (``__init__`` is exempt — construction
+    happens-before sharing).  Mutations through local aliases
+    (``s = self._streams[d]; s.x += 1``) are visible to this rule only
+    if the aliasing statement itself sits outside the lock.
+    """
+
+    name = "unlocked-shared-state"
+    severity = "error"
+    description = "shared stream-visible state mutated without a lock"
+    default_options = {
+        "modules": ("serving/", "distributed/"),
+        "classes": ("AdmissionQueue", "StreamBreaker", "FaultInjector"),
+        "exempt_methods": ("__init__",),
+    }
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.matches(self.options["modules"]):
+            return
+        classes = set(self.options["classes"])
+        exempt = set(self.options["exempt_methods"])
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.ClassDef) and node.name in classes):
+                continue
+            for method in node.body:
+                if not isinstance(
+                    method, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ) or method.name in exempt:
+                    continue
+                locked = self._locked_spans(method)
+                for mut in self._mutations(method):
+                    line = getattr(mut, "lineno", 0)
+                    if not any(lo <= line <= hi for lo, hi in locked):
+                        yield self.finding(
+                            ctx, mut,
+                            f"{node.name}.{method.name}() mutates shared "
+                            "state outside `with self._lock:` — racy "
+                            "under per-stream host threads",
+                        )
+
+    @staticmethod
+    def _locked_spans(method: ast.AST) -> list[tuple[int, int]]:
+        spans = []
+        for node in ast.walk(method):
+            if not isinstance(node, (ast.With, ast.AsyncWith)):
+                continue
+            for item in node.items:
+                expr = item.context_expr
+                name = dotted_name(expr)
+                if name and name.endswith("._lock"):
+                    spans.append((node.lineno, node.end_lineno or node.lineno))
+        return spans
+
+    @staticmethod
+    def _mutations(method: ast.AST):
+        for node in ast.walk(method):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (
+                    node.targets if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    if isinstance(t, (ast.Attribute, ast.Subscript)) \
+                            and _self_root(t):
+                        yield node
+                        break
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if (
+                    isinstance(f, ast.Attribute)
+                    and f.attr in _MUTATING_METHODS
+                    and _self_root(f.value)
+                ):
+                    yield node
+
+
+_BLOCKING_CALLS = (
+    "open", "input", "os.system", "subprocess.run", "subprocess.call",
+    "subprocess.check_call", "subprocess.check_output", "subprocess.Popen",
+)
+
+
+class BlockingCallInStreamLoop(Rule):
+    """Host-blocking operations inside per-device stream code.
+
+    The stream loop's latency budget is the device solve itself — a
+    ``time.sleep``, an in-function ``import`` (module-lock contention
+    plus first-import filesystem I/O), or a filesystem/subprocess call
+    stalls every ticket behind it on that stream.  Deliberate blocking
+    (injected-slow chaos faults) is annotated with
+    ``# repro: ignore[blocking-call-in-stream-loop]`` at the call site.
+    """
+
+    name = "blocking-call-in-stream-loop"
+    severity = "error"
+    description = "blocking host operation in per-device stream code"
+    default_options = {
+        "modules": ("serving/", "distributed/"),
+        "hot_functions": (
+            "drain", "_next_stream", "_dispatch_micro_batch", "_harvest",
+            "_finish_flight", "_admit", "step", "run",
+            "acquire", "record_success", "record_failure",
+        ),
+    }
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.matches(self.options["modules"]):
+            return
+        hot = set(self.options["hot_functions"])
+        for func, _stack in walk_functions(ctx.tree):
+            if func.name not in hot:
+                continue
+            for node in ast.walk(func):
+                if isinstance(node, (ast.Import, ast.ImportFrom)):
+                    yield self.finding(
+                        ctx, node,
+                        f"import inside {func.name}() — contends on the "
+                        "interpreter import lock per call; hoist to "
+                        "module scope",
+                    )
+                elif isinstance(node, ast.Call):
+                    name = dotted_name(node.func)
+                    if name is None:
+                        continue
+                    if name in _BLOCKING_CALLS or name.endswith(".sleep"):
+                        yield self.finding(
+                            ctx, node,
+                            f"{name}() blocks the {func.name}() stream "
+                            "path — every queued ticket on this stream "
+                            "waits behind it",
+                        )
+
+
+class SwallowedError(Rule):
+    """Bare excepts and silently-discarded exceptions.
+
+    The delivery contract requires every failure to land as a
+    structured ``SolveError`` in the ticket's result slot — an
+    ``except`` that catches and drops is a ticket that never resolves.
+    Flags bare ``except:`` anywhere, and broad handlers
+    (``Exception``/``BaseException``/``FaultInjected``) whose body
+    neither re-raises nor does anything with the failure (pass/
+    continue/break only).
+    """
+
+    name = "swallowed-error"
+    severity = "error"
+    description = "bare except or silently swallowed exception"
+    default_options = {
+        "modules": ("",),        # everything
+        "broad_types": ("Exception", "BaseException", "FaultInjected"),
+    }
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.matches(self.options["modules"]):
+            return
+        broad = set(self.options["broad_types"])
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield self.finding(
+                    ctx, node,
+                    "bare except: catches SystemExit/KeyboardInterrupt "
+                    "and hides the failure kind — name the exception",
+                )
+                continue
+            caught = {
+                (dotted_name(t) or "").rsplit(".", 1)[-1]
+                for t in (
+                    node.type.elts if isinstance(node.type, ast.Tuple)
+                    else [node.type]
+                )
+            }
+            if not (caught & broad):
+                continue
+            if all(isinstance(s, (ast.Pass, ast.Continue, ast.Break))
+                   for s in node.body):
+                yield self.finding(
+                    ctx, node,
+                    f"except {'/'.join(sorted(caught & broad))} swallowed "
+                    "— deliver a structured error (SolveError) or "
+                    "re-raise; a dropped failure is a ticket that "
+                    "never resolves",
+                )
+
+
+ALL_RULES: tuple[type[Rule], ...] = (
+    HostSyncInHotPath,
+    RecompileHazard,
+    DtypeContract,
+    DonationAfterUse,
+    UnlockedSharedState,
+    BlockingCallInStreamLoop,
+    SwallowedError,
+)

@@ -1,0 +1,326 @@
+"""Runtime contract gates: compile counting and host-sync attribution.
+
+The static rules (:mod:`repro.analysis.rules`) claim two steady-state
+invariants the serving stack's throughput depends on; this module makes
+them falsifiable at run time:
+
+* **zero post-warmup compilations** — :class:`CompileWatch` wraps
+  ``jax._src.compiler.backend_compile`` (the single funnel every jit
+  lowering passes through) and records each XLA compilation with its
+  module name and optimized HLO text.  The HLO is inspected with the
+  roofline parser (:func:`repro.roofline.hlo_parse.host_callback_ops`)
+  so a hot-path executable smuggling a host callback (python callback
+  custom-calls, infeed/outfeed) is flagged even when the compile count
+  itself is legitimate warmup.
+* **zero dispatch-phase host syncs** — :class:`SyncWatch` counts host
+  materializations of ``jax.Array`` values, attributed to the phase
+  label the service declares via :func:`sync_scope` (``dispatch`` /
+  ``harvest`` / ``finish`` / ``unpack`` / ``settle_poll``).  On the CPU
+  backend ``ArrayImpl`` exposes the buffer protocol, so there is no
+  universal interpreter-level hook — instead the watch patches the
+  conversion entry points repo code actually calls (``np.asarray`` /
+  ``np.array`` / ``jax.device_get`` and the Python-level ``ArrayImpl``
+  methods).  The gate asserts ``dispatch == 0`` *and* that harvest-side
+  phases counted nonzero syncs — a dead counter cannot pass.
+
+:func:`run_service_gate` is the smoke-drain harness CI runs: warm a
+:class:`~repro.serving.solve_service.SolveService` on a mixed workload,
+re-drain the identical workload under both watches, and require zero
+post-warmup compilations, zero dispatch-phase syncs, and no host
+callbacks in any hot-path executable.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Iterator
+
+import numpy as np
+
+__all__ = [
+    "CompileWatch", "SyncWatch", "sync_scope", "run_service_gate",
+]
+
+
+# ------------------------------------------------------------ compile watch
+
+
+@dataclasses.dataclass
+class CompileEvent:
+    """One XLA compilation observed by :class:`CompileWatch`."""
+
+    name: str                   # HLO module name, e.g. "jit__dc_solve_vmapped"
+    hlo: str                    # optimized HLO text ("" if unavailable)
+
+    @property
+    def host_callbacks(self) -> list[str]:
+        if not self.hlo:
+            return []
+        from repro.roofline.hlo_parse import host_callback_ops
+
+        return host_callback_ops(self.hlo)
+
+
+class CompileWatch:
+    """Context manager counting XLA compilations while active.
+
+    Wraps ``jax._src.compiler.backend_compile`` — every jit lowering
+    (pjit, pmap, eager-op fallback) funnels through it, so ``count``
+    is the ground truth the static recompile rules approximate.
+    Re-entrant use is rejected (the wrap is process-global).
+    """
+
+    _active: "CompileWatch | None" = None
+
+    def __init__(self, *, capture_hlo: bool = True):
+        self.capture_hlo = capture_hlo
+        self.events: list[CompileEvent] = []
+        self._orig: Callable | None = None
+
+    @property
+    def count(self) -> int:
+        return len(self.events)
+
+    @property
+    def names(self) -> list[str]:
+        return [e.name for e in self.events]
+
+    def host_callback_findings(self) -> list[tuple[str, str]]:
+        """(module name, op line) for every host callback in any
+        compiled executable observed by this watch."""
+        return [
+            (e.name, op) for e in self.events for op in e.host_callbacks
+        ]
+
+    def __enter__(self) -> "CompileWatch":
+        if CompileWatch._active is not None:
+            raise RuntimeError("CompileWatch is not re-entrant")
+        from jax._src import compiler as _compiler
+
+        self._orig = _compiler.backend_compile
+        orig = self._orig
+
+        def wrapped(backend, module, options, host_callbacks):
+            exe = orig(backend, module, options, host_callbacks)
+            name = "<unknown>"
+            try:
+                name = str(module.operation.attributes["sym_name"]).strip('"')
+            # best-effort metadata: a failed name extraction must not
+            # fail the compile it is observing
+            except Exception:  # repro: ignore[swallowed-error]
+                pass
+            hlo = ""
+            if self.capture_hlo:
+                try:
+                    hlo = exe.hlo_modules()[0].to_string()
+                # best-effort evidence capture, same contract as above
+                except Exception:  # repro: ignore[swallowed-error]
+                    pass
+            self.events.append(CompileEvent(name=name, hlo=hlo))
+            return exe
+
+        _compiler.backend_compile = wrapped
+        CompileWatch._active = self
+        return self
+
+    def __exit__(self, *exc) -> None:
+        from jax._src import compiler as _compiler
+
+        _compiler.backend_compile = self._orig
+        CompileWatch._active = None
+
+
+# --------------------------------------------------------------- sync watch
+
+# the scope-label stack the instrumented service pushes phases onto;
+# index 0 is the ambient (unattributed) label
+_SCOPE_STACK: list[str] = ["ambient"]
+
+
+@contextlib.contextmanager
+def sync_scope(label: str) -> Iterator[None]:
+    """Attribute host syncs inside the block to ``label``.
+
+    Near-zero overhead when no :class:`SyncWatch` is installed (a list
+    push/pop per block), so the service keeps its phases labeled
+    unconditionally.
+    """
+    _SCOPE_STACK.append(label)
+    try:
+        yield
+    finally:
+        _SCOPE_STACK.pop()
+
+
+class SyncWatch:
+    """Context manager counting host materializations per sync scope.
+
+    ``counts`` maps scope label -> number of ``jax.Array`` host
+    materializations observed inside that scope.  Patched entry points:
+    ``numpy.asarray`` / ``numpy.array`` (counted only for jax.Array
+    operands), ``jax.device_get``, and the Python-level ``ArrayImpl``
+    conversion methods (``tolist`` / ``__float__`` / ``__int__`` /
+    ``__bool__``).  A reentrancy flag keeps nested conversions (e.g.
+    ``device_get`` calling ``np.asarray``) from double counting.
+    """
+
+    _active: "SyncWatch | None" = None
+
+    def __init__(self) -> None:
+        self.counts: dict[str, int] = {}
+        self.calls: list[tuple[str, str]] = []   # (scope, entry point)
+        self._saved: list[tuple[Any, str, Any]] = []
+        self._in_count = False
+
+    def total(self, *labels: str) -> int:
+        if not labels:
+            return sum(self.counts.values())
+        return sum(self.counts.get(l, 0) for l in labels)
+
+    def _record(self, entry: str) -> None:
+        scope = _SCOPE_STACK[-1]
+        self.counts[scope] = self.counts.get(scope, 0) + 1
+        self.calls.append((scope, entry))
+
+    def _patch(self, obj: Any, attr: str, make) -> None:
+        orig = getattr(obj, attr)
+        self._saved.append((obj, attr, orig))
+        setattr(obj, attr, make(orig))
+
+    def __enter__(self) -> "SyncWatch":
+        if SyncWatch._active is not None:
+            raise RuntimeError("SyncWatch is not re-entrant")
+        import jax
+        import numpy
+        from jax._src import array as _jarray
+
+        watch = self
+
+        def counting_converter(name, orig):
+            def wrapped(a, *args, **kwargs):
+                if isinstance(a, jax.Array) and not watch._in_count:
+                    watch._in_count = True
+                    try:
+                        watch._record(name)
+                    finally:
+                        watch._in_count = False
+                return orig(a, *args, **kwargs)
+            return wrapped
+
+        def counting_method(name, orig):
+            def wrapped(self, *args, **kwargs):
+                if not watch._in_count:
+                    watch._in_count = True
+                    try:
+                        watch._record(name)
+                    finally:
+                        watch._in_count = False
+                return orig(self, *args, **kwargs)
+            return wrapped
+
+        self._patch(numpy, "asarray",
+                    lambda orig: counting_converter("np.asarray", orig))
+        self._patch(numpy, "array",
+                    lambda orig: counting_converter("np.array", orig))
+        self._patch(jax, "device_get",
+                    lambda orig: counting_converter("jax.device_get", orig))
+        for attr in ("tolist", "__float__", "__int__", "__bool__"):
+            try:
+                self._patch(
+                    _jarray.ArrayImpl, attr,
+                    lambda orig, a=attr: counting_method(
+                        f"ArrayImpl.{a}", orig),
+                )
+            except (AttributeError, TypeError):
+                pass        # method not patchable on this jaxlib
+        SyncWatch._active = self
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for obj, attr, orig in reversed(self._saved):
+            setattr(obj, attr, orig)
+        self._saved.clear()
+        SyncWatch._active = None
+
+
+# ------------------------------------------------------------- service gate
+
+
+def _gate_workload(service, rng: np.random.Generator) -> list[int]:
+    """A small mixed-n / mixed-method workload; deterministic given rng."""
+    rids = []
+    for n, method in ((6, "analog_2n"), (10, "analog_2n"), (6, "analog_n"),
+                      (12, "cholesky"), (6, "analog_2n"), (10, "cg")):
+        m = rng.normal(size=(n, n))
+        a = m @ m.T + n * np.eye(n)
+        b = rng.normal(size=n)
+        rids.append(service.submit(a, b, method=method))
+    return rids
+
+
+def run_service_gate(
+    *, n_devices: int | None = None, seed: int = 0, verbose: bool = False,
+) -> dict[str, Any]:
+    """Smoke-drain contract gate over a live :class:`SolveService`.
+
+    Drains one warmup pass (compiles allowed), then re-drains an
+    identical workload under :class:`CompileWatch` + :class:`SyncWatch`.
+    Returns a report dict with ``ok`` plus the evidence; the contract:
+
+    * ``post_warmup_compiles == 0`` — signatures, patterns and bucket
+      shapes are cache-stable across drains;
+    * ``dispatch_syncs == 0`` — the dispatch phase never materializes
+      a device value (host/device overlap is real);
+    * ``harvest_syncs > 0`` — the counter is alive (falsifiability);
+    * no host callbacks inside any executable compiled during warmup.
+    """
+    from repro.serving.solve_service import SolveService
+
+    def build():
+        return SolveService(
+            batch_slots=2, n_devices=n_devices, inflight_per_device=2,
+        )
+
+    service = build()
+
+    # warmup drain: all compilation happens here, observed for the
+    # host-callback scan
+    with CompileWatch() as warmup_watch:
+        rng = np.random.default_rng(seed)
+        _gate_workload(service, rng)
+        warm = service.drain()
+    callbacks = warmup_watch.host_callback_findings()
+
+    # measured drain: identical workload through fresh signature/ticket
+    # objects — compile-count and sync-attribution must both be silent
+    with CompileWatch(capture_hlo=False) as watch, SyncWatch() as sync:
+        rng = np.random.default_rng(seed)
+        _gate_workload(service, rng)
+        out = service.drain()
+
+    errors = [r for r in list(warm.values()) + list(out.values())
+              if not hasattr(r, "x")]
+    dispatch_syncs = sync.total("dispatch")
+    harvest_syncs = sync.total("harvest", "finish", "unpack", "settle_poll")
+    report = {
+        "ok": (
+            watch.count == 0
+            and dispatch_syncs == 0
+            and harvest_syncs > 0
+            and not callbacks
+            and not errors
+        ),
+        "warmup_compiles": warmup_watch.count,
+        "post_warmup_compiles": watch.count,
+        "post_warmup_compile_names": watch.names,
+        "dispatch_syncs": dispatch_syncs,
+        "harvest_syncs": harvest_syncs,
+        "sync_counts": dict(sync.counts),
+        "host_callbacks": callbacks,
+        "solve_errors": len(errors),
+        "tickets": len(warm) + len(out),
+    }
+    if verbose:
+        report["warmup_compile_names"] = warmup_watch.names
+    return report

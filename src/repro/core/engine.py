@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.runtime import sync_scope
 from repro.core.network import Netlist
 from repro.core.specs import OpAmpSpec, AD712
 
@@ -85,7 +86,7 @@ BF16_SETTLE_RTOL = 0.15
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class StampPattern:
     """Static state-space structure for one ``(design, n)`` family.
 
@@ -95,6 +96,14 @@ class StampPattern:
     lexicographically ordered by ``(i, j)``; ground slots by node.  Amps
     are numbered pair slots first (amp1 then amp2 per slot), then ground
     slots — the ordering the offset draws rely on.
+
+    ``eq=False`` + the explicit ``__eq__``/``__hash__`` below make the
+    pattern a stable cache key: the dataclass-generated ``__eq__``
+    compares ndarray fields with ``==`` (ambiguous truth value) and the
+    generated ``__hash__`` raises TypeError, so equal-but-distinct
+    patterns used as jit static args or dict keys would either crash or
+    retrigger lowering.  Identity is defined by the primary fields only
+    — the derived index arrays are a pure function of them.
     """
 
     design: str
@@ -118,6 +127,34 @@ class StampPattern:
     amp_int_index: np.ndarray = dataclasses.field(default=None, repr=False)
     amp_out_index: np.ndarray = dataclasses.field(default=None, repr=False)
     n_states: int = 0
+
+    def _identity(self) -> tuple:
+        return (
+            self.design, self.n_nodes, self.n_unknowns,
+            self.states_per_amp, self.buffers,
+        )
+
+    def __eq__(self, other) -> bool:
+        if other is self:
+            return True
+        if not isinstance(other, StampPattern):
+            return NotImplemented
+        return (
+            self._identity() == other._identity()
+            and np.array_equal(self.pair_i, other.pair_i)
+            and np.array_equal(self.pair_j, other.pair_j)
+            and np.array_equal(self.gcell_i, other.gcell_i)
+        )
+
+    def __hash__(self) -> int:
+        h = getattr(self, "_hash_cache", None)
+        if h is None:
+            h = hash(self._identity() + (
+                self.pair_i.tobytes(), self.pair_j.tobytes(),
+                self.gcell_i.tobytes(),
+            ))
+            object.__setattr__(self, "_hash_cache", h)
+        return h
 
     @property
     def n_pair_slots(self) -> int:
@@ -1285,21 +1322,26 @@ def _settle_loop(step_chunk, z, dt, x_ref, *, rtol, atol, check_every,
     done = np.zeros(b_count, dtype=bool)
     res = np.zeros(b_count, dtype=np.float64)
     taken = 0
-    while taken < max_steps:
-        chunk = min(check_every, max_steps - taken)
-        z, r = step_chunk(z, chunk)
-        taken += chunk
-        x_now = np.asarray(z[:, :nu], dtype=np.float64)
-        # dt was folded into the operator, so the kernel's reduction is
-        # dt * max|M z + c|; undo the fold to report the true residual
-        res = np.asarray(r, dtype=np.float64) / dt
-        ok = np.all(np.abs(x_now - x_ref) <= tol, axis=1)
-        newly = ok & ~done
-        steps[newly] = taken
-        done |= newly
-        if np.all(done):
-            break
-    x_final = np.asarray(z[:, :nu], dtype=np.float64)
+    # the per-chunk convergence poll IS the sweep's sanctioned host
+    # sync — labeled so SyncWatch attributes it to settle_poll, not to
+    # the dispatch phase of whichever service called us
+    with sync_scope("settle_poll"):
+        while taken < max_steps:
+            chunk = min(check_every, max_steps - taken)
+            z, r = step_chunk(z, chunk)
+            taken += chunk
+            x_now = np.asarray(z[:, :nu], dtype=np.float64)
+            # dt was folded into the operator, so the kernel's reduction
+            # is dt * max|M z + c|; undo the fold to report the true
+            # residual
+            res = np.asarray(r, dtype=np.float64) / dt
+            ok = np.all(np.abs(x_now - x_ref) <= tol, axis=1)
+            newly = ok & ~done
+            steps[newly] = taken
+            done |= newly
+            if np.all(done):
+                break
+        x_final = np.asarray(z[:, :nu], dtype=np.float64)
     return steps, x_final, res
 
 

@@ -43,6 +43,7 @@ import functools
 
 import numpy as np
 
+from repro.analysis.runtime import sync_scope
 from repro.core.specs import CircuitParams, DEFAULT_PARAMS
 from repro.core import transform as T
 
@@ -594,7 +595,12 @@ def build_proposed_batch(
     b = np.asarray(b, dtype=np.float64)
     b_count, n = b.shape
     fn = _batched_transform_2n(d_policy, beta, alpha, params)
-    m_dc, k_s, sign = (np.asarray(v) for v in fn(a, b))
+    # sanctioned host-build sync: the component extraction below is
+    # host-side numpy by design, so the transform outputs must
+    # materialize here — labeled net_build so SyncWatch attributes it
+    # to the build phase, not to the caller's dispatch scope
+    with sync_scope("net_build"):
+        m_dc, k_s, sign = tuple(np.asarray(v) for v in fn(a, b))
     supply_g = np.concatenate([k_s, k_s], axis=1)
     supply_v = params.supply_v * np.concatenate([sign, -sign], axis=1)
 

@@ -243,6 +243,10 @@ class StreamBreaker:
         self.trips = 0               # closed/half_open -> open transitions
         self.probes = 0              # open -> half_open transitions
         self.restores = 0            # half_open -> closed transitions
+        # state transitions are read-modify-write on per-stream state
+        # reachable from every stream's host thread; acquire/record_*
+        # must be atomic or two threads can both win the same probe slot
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
         return len(self._streams)
@@ -258,14 +262,15 @@ class StreamBreaker:
         exactly this one dispatch as its probe; while the probe is in
         flight further acquires are refused.
         """
-        s = self._streams[dev]
-        if s.state == "closed":
-            return True
-        if s.state == "open" and self.clock() >= s.open_until:
-            s.state = "half_open"
-            self.probes += 1
-            return True
-        return False
+        with self._lock:
+            s = self._streams[dev]
+            if s.state == "closed":
+                return True
+            if s.state == "open" and self.clock() >= s.open_until:
+                s.state = "half_open"
+                self.probes += 1
+                return True
+            return False
 
     def release(self, dev: int) -> None:
         """Hand back an acquired probe slot without a device verdict.
@@ -276,40 +281,43 @@ class StreamBreaker:
         returns to ``open`` with its backoff already elapsed — the
         next acquire probes again immediately.
         """
-        s = self._streams[dev]
-        if s.state == "half_open":
-            s.state = "open"
-            s.open_until = self.clock()
+        with self._lock:
+            s = self._streams[dev]
+            if s.state == "half_open":
+                s.state = "open"
+                s.open_until = self.clock()
 
     def record_success(self, dev: int) -> None:
-        s = self._streams[dev]
-        if s.state == "half_open":
-            s.state = "closed"
-            self.restores += 1
-        s.consecutive_failures = 0
-        s.backoff_s = 0.0
+        with self._lock:
+            s = self._streams[dev]
+            if s.state == "half_open":
+                s.state = "closed"
+                self.restores += 1
+            s.consecutive_failures = 0
+            s.backoff_s = 0.0
 
     def record_failure(self, dev: int) -> bool:
         """Count one device-side failure; returns True when this call
         trips the stream open (caller quarantines its in-flights)."""
-        s = self._streams[dev]
-        s.consecutive_failures += 1
-        if s.state == "half_open":
-            # failed probe: back off twice as long
-            s.state = "open"
-            s.backoff_s = min(
-                max(s.backoff_s, self.backoff_s) * 2.0, self.backoff_max_s
-            )
-            s.open_until = self.clock() + s.backoff_s
-            self.trips += 1
-            return True
-        if s.state == "closed" and s.consecutive_failures >= self.threshold:
-            s.state = "open"
-            s.backoff_s = self.backoff_s
-            s.open_until = self.clock() + s.backoff_s
-            self.trips += 1
-            return True
-        return False
+        with self._lock:
+            s = self._streams[dev]
+            s.consecutive_failures += 1
+            if s.state == "half_open":
+                # failed probe: back off twice as long
+                s.state = "open"
+                s.backoff_s = min(
+                    max(s.backoff_s, self.backoff_s) * 2.0, self.backoff_max_s
+                )
+                s.open_until = self.clock() + s.backoff_s
+                self.trips += 1
+                return True
+            if s.state == "closed" and s.consecutive_failures >= self.threshold:
+                s.state = "open"
+                s.backoff_s = self.backoff_s
+                s.open_until = self.clock() + s.backoff_s
+                self.trips += 1
+                return True
+            return False
 
     def force_probe(self) -> int:
         """Expire the soonest-recovering open stream's backoff now.
@@ -318,14 +326,15 @@ class StreamBreaker:
         service must keep probing rather than deadlock — "degrade to
         fewer streams", never to zero.  Returns the stream index.
         """
-        open_streams = [
-            i for i, s in enumerate(self._streams) if s.state == "open"
-        ]
-        if not open_streams:
-            raise RuntimeError("force_probe with no open stream")
-        dev = min(open_streams, key=lambda i: self._streams[i].open_until)
-        self._streams[dev].open_until = self.clock()
-        return dev
+        with self._lock:
+            open_streams = [
+                i for i, s in enumerate(self._streams) if s.state == "open"
+            ]
+            if not open_streams:
+                raise RuntimeError("force_probe with no open stream")
+            dev = min(open_streams, key=lambda i: self._streams[i].open_until)
+            self._streams[dev].open_until = self.clock()
+            return dev
 
     def stats(self) -> dict:
         return {

@@ -299,3 +299,36 @@ def loop_aware_costs(hlo_text: str) -> dict:
     """Top-level convenience: per-device flops/bytes/collective-bytes."""
     hc = HloCost(hlo_text)
     return hc.cost()
+
+
+# ops that round-trip through the host while the executable runs —
+# a hot-path executable containing one hides a host sync from every
+# host-side counter (the block happens inside XLA)
+_HOST_OPS = ("infeed", "outfeed", "send", "recv", "send-done", "recv-done")
+_CALLBACK_TARGET_RE = re.compile(
+    r'custom_call_target="([^"]*(?:callback|py_func|host)[^"]*)"'
+)
+
+
+def host_callback_ops(hlo_text: str) -> list[str]:
+    """Host-callback / infeed-outfeed instructions in an HLO module.
+
+    Used by the runtime compile gate
+    (:class:`repro.analysis.runtime.CompileWatch`): the steady-state
+    serving contract requires hot-path executables to be pure device
+    programs, so python-callback custom-calls and infeed/outfeed ops
+    are contract violations wherever they compile.  Returns one
+    ``"computation: op(name)"`` entry per offending instruction.
+    """
+    hc = HloCost(hlo_text)
+    out: list[str] = []
+    for comp, instrs in hc.computations.items():
+        for instr in instrs:
+            if instr.op in _HOST_OPS:
+                out.append(f"{comp}: {instr.op}({instr.name})")
+            elif instr.op == "custom-call":
+                m = _CALLBACK_TARGET_RE.search(instr.raw)
+                if m:
+                    out.append(f"{comp}: custom-call[{m.group(1)}]"
+                               f"({instr.name})")
+    return out

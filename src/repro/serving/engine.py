@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+import time
 from typing import Any, Callable, Iterable, Optional
 
 import jax
@@ -31,6 +33,7 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, init_decode_cache, prefill
+from repro.serving.faults import SolveError
 
 
 def admission_key(item) -> tuple:
@@ -74,39 +77,47 @@ class AdmissionQueue:
     def __init__(self) -> None:
         self._items: list = []
         self._seq = 0
+        # the queue is shared across per-device stream threads (submit
+        # from the caller, pop/requeue from every stream's drain path)
+        self._lock = threading.Lock()
 
     def push(self, item, *, priority=_UNSET, deadline=_UNSET):
         if priority is not self._UNSET:
             item.priority = priority
         if deadline is not self._UNSET:
             item.deadline = deadline
-        item.seq = self._seq
-        self._seq += 1
-        self._items.append(item)
+        with self._lock:
+            item.seq = self._seq
+            self._seq += 1
+            self._items.append(item)
         return item
 
     def requeue(self, items: Iterable) -> None:
         """Re-admit items that keep their original admission stamps."""
-        self._items.extend(items)
+        with self._lock:
+            self._items.extend(items)
 
     def pop(self):
         """Remove and return the next item in admission order."""
-        if not self._items:
-            raise IndexError("pop from empty AdmissionQueue")
-        best = min(range(len(self._items)),
-                   key=lambda i: admission_key(self._items[i]))
-        return self._items.pop(best)
+        with self._lock:
+            if not self._items:
+                raise IndexError("pop from empty AdmissionQueue")
+            best = min(range(len(self._items)),
+                       key=lambda i: admission_key(self._items[i]))
+            return self._items.pop(best)
 
     def pop_all(self) -> list:
         """Drain the whole queue in admission order."""
-        out = sorted(self._items, key=admission_key)
-        self._items.clear()
+        with self._lock:
+            out = sorted(self._items, key=admission_key)
+            self._items.clear()
         return out
 
     def discard(self, pred: Callable[[Any], bool]) -> list:
         """Remove (and return) every item matching ``pred``."""
-        dropped = [it for it in self._items if pred(it)]
-        self._items = [it for it in self._items if not pred(it)]
+        with self._lock:
+            dropped = [it for it in self._items if pred(it)]
+            self._items = [it for it in self._items if not pred(it)]
         return dropped
 
     def __len__(self) -> int:
@@ -179,17 +190,13 @@ class ServeEngine:
         self.queue.push(req, priority=priority, deadline=deadline)
 
     def _admit(self):
-        import time as _time
-
         for slot in range(self.slots):
             while self.active[slot] is None and self.queue:
                 req = self.queue.pop()
                 # deadline enforcement at pop time: an expired request
                 # is rejected with a structured error, never prefilled
                 # (deadlines are absolute time.monotonic() stamps)
-                if req.deadline is not None and _time.monotonic() >= req.deadline:
-                    from repro.serving.faults import SolveError
-
+                if req.deadline is not None and time.monotonic() >= req.deadline:
                     req.done = True
                     req.error = SolveError(kind="deadline_expired")
                     self.expired += 1
@@ -238,9 +245,10 @@ class ServeEngine:
                 self.faulted_steps += 1
                 return
             if kind == "slow":
-                import time as _time
-
-                _time.sleep(self.fault_injector.plan.slow_s)
+                # the injected-slow chaos fault: stalling IS the fault
+                # being simulated, so the block here is deliberate
+                time.sleep(  # repro: ignore[blocking-call-in-stream-loop]
+                    self.fault_injector.plan.slow_s)
         toks = np.zeros((self.slots, 1), dtype=np.int32)
         for s, req in enumerate(self.active):
             if req is not None and req.out:

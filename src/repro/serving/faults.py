@@ -35,6 +35,7 @@ deadline enforcement has something to enforce.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Mapping
 
@@ -152,6 +153,11 @@ class FaultInjector:
         self.dispatches = 0
         self.injected: dict[str, int] = {k: 0 for k in FAULT_KINDS}
         self._schedule = {idx: kind for idx, kind in plan.schedule}
+        # draw() is called from every stream's dispatch path and must
+        # consume exactly one rng sample per dispatch index — an
+        # unlocked interleaving double-spends indices and desyncs the
+        # reproducible fault timeline
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------ decide
     def draw(self, dev: int | None = None) -> str | None:
@@ -161,27 +167,28 @@ class FaultInjector:
         device-target filter, so the fault timeline is reproducible
         across different stream layouts.
         """
-        idx = self.dispatches
-        self.dispatches += 1
-        u = float(self.rng.random())
-        kind = self._schedule.get(idx)
-        if kind is None and self.plan.rates:
-            acc = 0.0
-            for k in FAULT_KINDS:
-                acc += float(self.plan.rates.get(k, 0.0))
-                if u < acc:
-                    kind = k
-                    break
-        if kind is None:
-            return None
-        if (
-            self.plan.devices is not None
-            and dev is not None
-            and dev not in self.plan.devices
-        ):
-            return None
-        self.injected[kind] += 1
-        return kind
+        with self._lock:
+            idx = self.dispatches
+            self.dispatches += 1
+            u = float(self.rng.random())
+            kind = self._schedule.get(idx)
+            if kind is None and self.plan.rates:
+                acc = 0.0
+                for k in FAULT_KINDS:
+                    acc += float(self.plan.rates.get(k, 0.0))
+                    if u < acc:
+                        kind = k
+                        break
+            if kind is None:
+                return None
+            if (
+                self.plan.devices is not None
+                and dev is not None
+                and dev not in self.plan.devices
+            ):
+                return None
+            self.injected[kind] += 1
+            return kind
 
     # ------------------------------------------------------------- apply
     def build_fault(self, kind: str | None) -> None:
